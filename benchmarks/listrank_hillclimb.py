@@ -1,0 +1,93 @@
+"""§Perf hillclimb on the list-ranking core (the paper's own workload).
+
+Config under test: List(n/p=2^15, gamma=1.0), p=16 virtual PEs (4x4),
+SRS + grid indirection — the paper's Fig-3/4 operating point. Measured:
+CPU wall time (min of 3) + counted messages/rounds + the alpha-beta
+modeled time at p=24576 (SuperMUC constants), since alpha effects do
+not show on one CPU.
+
+Iterations follow the hypothesis -> change -> measure -> verdict loop;
+results land in benchmarks/results/perf/listrank_hillclimb.json and the
+narrative in EXPERIMENTS.md §Perf.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+HERE = pathlib.Path(__file__).parent
+sys.path.insert(0, str(HERE.parent / "src"))
+
+from repro.core.listrank import analysis  # noqa: E402
+
+
+def worker(spec):
+    cmd = [sys.executable, str(HERE / "_worker.py"), json.dumps(spec)]
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=3600)
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(proc.stdout[-400:] + proc.stderr[-1500:])
+
+
+def modeled_large_p(stats, p_meas, p_model=24576, d=2):
+    """alpha-beta projection to the paper's 24576 cores from counted
+    per-PE message/round loads (weak scaling keeps both ~constant)."""
+    m = analysis.SUPERMUC
+    rounds = max(stats["rounds"] // p_meas, 1)
+    words_pe = 3.0 * (stats["chase_msgs"] + stats["pd_msgs"]
+                      + stats["fixup_msgs"]) / p_meas
+    return (m.alpha * rounds * d * p_model ** (1 / d) + m.beta * d * words_pe)
+
+
+BASE = dict(p=16, mesh=(4, 4), n_per_pe=1 << 15, gamma=1.0,
+            algorithm="srs", srs_rounds=2, contraction=True,
+            indirection="grid", iters=3, ruler_fraction=1 / 32)
+
+STEPS = [
+    ("baseline r=n/32 srs2 grid", {}),
+    # H1: fewer rulers -> fewer total messages? (model: more rounds)
+    ("r=n/64", {"ruler_fraction": 1 / 64}),
+    # H2: more rulers -> fewer rounds, bigger base case
+    ("r=n/16", {"ruler_fraction": 1 / 16}),
+    ("r=n/8", {"ruler_fraction": 1 / 8}),
+    # H3: one SRS round (paper: two is better at scale)
+    ("srs1", {"srs_rounds": 1}),
+    # H4: direct delivery (no indirection) at this p
+    ("direct", {"indirection": "direct"}),
+    # H5: topology-aware hops
+    ("topo", {"indirection": "topo"}),
+    # H6: faithful Algorithm 1 (explicit reversal) vs §2.5
+    ("reversal", {"avoid_reversal": False}),
+]
+
+
+def main():
+    out = []
+    for name, kw in STEPS:
+        spec = dict(BASE)
+        spec.update(kw)
+        r = worker(spec)
+        row = {
+            "name": name,
+            "wall_s_min": r["wall_s_min"],
+            "rounds": r["stats"]["rounds"] // spec["p"],
+            "chase_msgs": r["stats"]["chase_msgs"],
+            "pd_msgs": r["stats"]["pd_msgs"],
+            "fixup_msgs": r["stats"]["fixup_msgs"],
+            "sub_size": r["stats"]["sub_size"],
+            "reversal_msgs": r["stats"].get("reversal_msgs", 0),
+            "modeled_24576_s": modeled_large_p(
+                r["stats"], spec["p"],
+                d=1 if spec.get("indirection") == "direct" else 2),
+        }
+        out.append(row)
+        print(json.dumps(row))
+    dst = HERE / "results" / "perf"
+    dst.mkdir(parents=True, exist_ok=True)
+    (dst / "listrank_hillclimb.json").write_text(json.dumps(out, indent=1))
+    print("wrote", dst / "listrank_hillclimb.json")
+
+
+if __name__ == "__main__":
+    main()

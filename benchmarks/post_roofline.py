@@ -1,0 +1,47 @@
+"""Re-derive roofline terms for already-recorded dry-run cells after a
+model/constant change (no recompiles — the exact counts are stored)."""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+import repro.launch.dryrun as DR  # noqa: E402  (sets XLA flags; fine)
+from repro import configs  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+
+
+def refresh(path):
+    rec = json.loads(path.read_text())
+    if "skipped" in rec:
+        return
+    cfg = configs.get_config(rec["arch"])
+    chips = rec["chips"]
+    flops = rec["cost"]["flops_per_device"]
+    bytes_hlo = rec["cost"].get("bytes_per_device_hlo",
+                                rec["cost"].get("bytes_per_device", 0.0))
+    coll = sum(v for k, v in rec["collectives"].items()
+               if k != "collective_ops")
+    bm = DR.analytic_memory_bytes(cfg, rec["shape"], rec["kind"], chips,
+                                  rec["params"], rec["active_params"])
+    t = {"compute_s": flops / mesh_lib.PEAK_FLOPS_BF16,
+         "memory_s": bm / mesh_lib.HBM_BW,
+         "collective_s": coll / mesh_lib.ICI_BW}
+    rec["cost"]["bytes_per_device_hlo"] = bytes_hlo
+    rec["cost"]["bytes_per_device_model"] = bm
+    rec["cost"].pop("bytes_per_device", None)
+    ro = rec["roofline"]
+    ro.update(t)
+    ro["memory_hlo_s"] = bytes_hlo / mesh_lib.HBM_BW
+    ro["bottleneck"] = max(t, key=t.get)
+    ro["step_time_bound_s"] = max(t.values())
+    ro["mfu_bound"] = ro["model_flops"] / chips / mesh_lib.PEAK_FLOPS_BF16 \
+        / max(max(t.values()), 1e-12)
+    path.write_text(json.dumps(rec, indent=1))
+    print("refreshed", path.name, ro["bottleneck"],
+          round(ro["mfu_bound"], 3))
+
+
+if __name__ == "__main__":
+    d = pathlib.Path(__file__).parent / "results" / "dryrun"
+    for f in sorted(d.glob("*.json")):
+        refresh(f)

@@ -1,0 +1,58 @@
+"""Render the §Dry-run / §Roofline markdown tables from the dry-run
+artifacts.
+
+  PYTHONPATH=src python benchmarks/roofline_table.py [--mesh single]
+"""
+import argparse
+import json
+import pathlib
+
+HERE = pathlib.Path(__file__).parent
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b / 1e12:.1f}TB"
+    if b >= 1e9:
+        return f"{b / 1e9:.1f}GB"
+    return f"{b / 1e6:.0f}MB"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--dir", default=str(HERE / "results" / "dryrun"))
+    args = ap.parse_args()
+    rows = []
+    skips = []
+    for f in sorted(pathlib.Path(args.dir).glob(f"*__{args.mesh}.json")):
+        rec = json.loads(f.read_text())
+        if "skipped" in rec:
+            skips.append(rec)
+            continue
+        rows.append(rec)
+
+    print(f"### Roofline — {rows[0]['mesh'] if rows else args.mesh} mesh, "
+          f"per-chip terms (seconds/step)\n")
+    print("| arch | shape | step | HBM/dev | compute | memory | collective"
+          " | bound | useful | MFU≤ |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        ro = r["roofline"]
+        peak = r["memory"].get("peak_bytes_per_device", 0)
+        print(f"| {r['arch']} | {r['shape']} | {r['kind']} "
+              f"| {fmt_bytes(peak)} "
+              f"| {ro['compute_s']:.3g} | {ro['memory_s']:.3g} "
+              f"| {ro['collective_s']:.3g} "
+              f"| {ro['bottleneck'].replace('_s', '')} "
+              f"| {ro['useful_flops_ratio']:.2f} "
+              f"| {ro['mfu_bound']:.3f} |")
+    if skips:
+        print("\nSkipped cells (assignment rule):")
+        for s in skips:
+            print(f"- {s['arch']} / {s['shape']}: {s['skipped']}")
+    print(f"\n{len(rows)} compiled cells, {len(skips)} documented skips.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""End-to-end driver: train a ~100M-parameter model for a few hundred
+steps with the full production stack (packed data pipeline, pjit'd
+AdamW step with remat + scanned layers, fault-tolerant supervisor with
+async checkpoints).
+
+  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+Uses a ~100M llama-family config (a scaled tinyllama) on whatever
+devices exist. On CPU this takes a while at the full size — pass
+--tiny for a fast demonstration of the identical code path.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.launch import train as train_main  # noqa: E402
+from repro.models.params import count_params  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro import configs  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m")
+    args = ap.parse_args()
+
+    if args.tiny:
+        # same code path, minutes not hours on CPU
+        argv = ["--arch", "tinyllama-1.1b", "--smoke",
+                "--steps", str(args.steps), "--batch", "8", "--seq", "128"]
+    else:
+        # ~100M llama-family config registered ad hoc
+        import repro.configs.tinyllama_1_1b as tl
+        cfg100 = tl.CONFIG.with_(
+            name="llama-100m", num_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32000,
+            dtype=jax.numpy.float32)
+        n = count_params(M.param_specs(cfg100))
+        print(f"llama-100m: {n / 1e6:.1f}M params")
+        configs._ARCHS["llama-100m"] = "tinyllama_1_1b"  # reuse module
+        tl.SMOKE = cfg100  # serve via the smoke slot
+        argv = ["--arch", "llama-100m", "--smoke",
+                "--steps", str(args.steps), "--batch", "4", "--seq", "512"]
+    argv += ["--ckpt-dir", args.ckpt_dir, "--log-every", "10",
+             "--lr", "1e-3"]
+    train_main.main(argv)
+
+
+if __name__ == "__main__":
+    main()

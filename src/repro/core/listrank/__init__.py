@@ -1,0 +1,22 @@
+"""Distributed list ranking in JAX — the paper's core contribution.
+
+Implements the sparse-ruling-set (SRS) algorithm with ruler spawning
+[Sibeyn'99; Sanders/Schimek/Uhl/Weidmann 2026], pointer doubling (Wyllie)
+as baseline and base case, local contraction for locality exploitation,
+and direct / grid / topology-aware message indirection mapped onto JAX
+mesh collectives.
+"""
+from repro.core.listrank.config import ListRankConfig, IndirectionSpec
+from repro.core.listrank.api import rank_list, rank_list_with_stats
+from repro.core.listrank.sequential import rank_list_seq
+from repro.core.listrank import instances, analysis
+
+__all__ = [
+    "ListRankConfig",
+    "IndirectionSpec",
+    "rank_list",
+    "rank_list_with_stats",
+    "rank_list_seq",
+    "instances",
+    "analysis",
+]

@@ -1,0 +1,309 @@
+"""Public API: distributed list ranking over a JAX mesh.
+
+``rank_list(succ, rank, mesh, ...)`` runs the paper's engineered
+pipeline:
+
+  1. local contraction of PE-local sublists (§2.3, optional),
+  2. sparse-ruling-set with spawning, ``srs_rounds`` recursion levels,
+     pointer doubling base case (§2.1-2.2); or plain pointer doubling,
+  3. direction handling: §2.5 terminal→initial postprocess (default) or
+     the faithful Algorithm-1 reversal preprocessing,
+  4. restoration of locally contracted elements.
+
+Every capacity (mailboxes, queues, subproblem stores) is host-derived
+from the instance parameters with configurable slack; runs that hit any
+capacity report it in ``stats`` and the driver retries with doubled
+slack. Capacity therefore affects only performance, never correctness.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.listrank import local as local_lib
+from repro.core.listrank import store as store_lib
+from repro.core.listrank.config import IndirectionSpec, ListRankConfig
+from repro.core.listrank.doubling import doubling_solve
+from repro.core.listrank.exchange import MeshPlan, route
+from repro.core.listrank.srs import (LevelSpec, gather_until_done,
+                                     route_until_done, solve_store,
+                                     zero_stats, _merge)
+
+FATAL_KEYS = ("dropped", "sub_overflow", "store_miss", "undelivered")
+
+
+def build_specs(cfg: ListRankConfig, plan: MeshPlan, m: int, n: int,
+                term_bound: int, slack_mult: float = 1.0) -> tuple[LevelSpec, ...]:
+    """Host-side derivation of every static capacity (see module doc)."""
+    frac = cfg.ruler_fraction if cfg.ruler_fraction is not None else 1.0 / 32.0
+    specs: list[LevelSpec] = []
+    cap = m
+    tb = term_bound
+    slack = cfg.capacity_slack * slack_mult
+    p = plan.p
+    for level in range(cfg.srs_rounds):
+        r_static = max(cfg.min_rulers_per_pe, int(math.ceil(frac * cap)))
+        mail_caps = tuple(
+            max(cfg.min_capacity,
+                int(math.ceil(slack * r_static / plan.hop_size(hop))))
+            for hop in plan.indirection.hops)
+        inbox = sum(plan.hop_size(h) * c
+                    for h, c in zip(plan.indirection.hops, mail_caps))
+        queue_cap = int(max(cfg.queue_slack * r_static * slack_mult,
+                            2 * inbox + cfg.spawn_window + 64))
+        max_rounds = int(cfg.max_round_slack * (1.0 / frac) + 256)
+        exp_sub = r_static * (1.0 + math.log(max(1.0 / frac, 2.0))) + tb + 64
+        cap_sub = min(cap, int(math.ceil(cfg.sub_capacity_slack * slack_mult
+                                         * exp_sub)))
+        gcap = tuple(
+            max(cfg.min_capacity,
+                int(math.ceil(slack * cap / plan.hop_size(hop))))
+            for hop in plan.indirection.hops)
+        specs.append(LevelSpec(
+            cap=cap, r_static=r_static, mail_caps=mail_caps,
+            queue_cap=queue_cap, spawn_window=cfg.spawn_window,
+            max_rounds=max_rounds, cap_sub=cap_sub,
+            gather_req_cap=gcap, gather_resp_cap=gcap, base=False))
+        cap = cap_sub
+        tb = cap_sub  # every sub element may be a sub-terminal
+    # base level (pointer doubling or all-gather)
+    gcap = tuple(
+        max(cfg.min_capacity,
+            int(math.ceil(slack * cap / plan.hop_size(hop))))
+        for hop in plan.indirection.hops)
+    specs.append(LevelSpec(
+        cap=cap, r_static=0, mail_caps=(0,) * plan.indirection.depth,
+        queue_cap=0, spawn_window=0,
+        max_rounds=int(math.ceil(math.log2(max(n, 2)))) + 8, cap_sub=0,
+        gather_req_cap=gcap, gather_resp_cap=gcap, base=True))
+    return tuple(specs)
+
+
+# --------------------------------------------------------------------------
+# the per-PE program (runs under shard_map)
+# --------------------------------------------------------------------------
+
+def _reverse_instance(plan, spec, owner_of, st, stats):
+    """Faithful Algorithm-1 preprocessing: build the reversed instance
+    with one n-message exchange (the cost §2.5 avoids)."""
+    cap = st.ids.shape[0]
+    gid = st.ids
+    nonterm = st.valid & (st.succ != gid)
+    payload = {"target": st.succ, "src": gid, "w": st.rank}
+    dest = owner_of(st.succ).astype(jnp.int32)
+
+    got = jnp.zeros(cap, jnp.bool_)
+    succ_rev = jnp.where(st.valid, gid, st.succ)
+    rank_rev = jnp.zeros_like(st.rank)
+
+    def deliver(carry, delivered, dval):
+        got, succ_rev, rank_rev = carry
+        slots, found = store_lib.slot_of(st, delivered["target"])
+        ok = dval & found
+        idx = jnp.where(ok, slots, cap)
+        got = got.at[idx].set(True, mode="drop")
+        succ_rev = succ_rev.at[idx].set(delivered["src"], mode="drop")
+        rank_rev = rank_rev.at[idx].set(delivered["w"], mode="drop")
+        return got, succ_rev, rank_rev
+
+    (got, succ_rev, rank_rev), pending, msgs = route_until_done(
+        plan, spec.mail_caps, payload, dest, nonterm, deliver,
+        (got, succ_rev, rank_rev))
+    stats = _merge(stats, {"reversal_msgs": msgs, "undelivered": pending})
+    rev = st.replace(succ=succ_rev, rank=rank_rev)
+    return rev, stats
+
+
+def _restore_local(plan, spec, owner_of, st, aux, rep, succ_orig, rank_orig,
+                   base, stats):
+    """Restore locally contracted elements (§2.3 restoration).
+
+    R1: every rep's solved succ points to a contracted-instance terminal
+        l_t whose local chain continues to the true terminal — fetch the
+        tail (terminal id, tail distance) from l_t's owner (aggregated).
+    R2: interior elements splice their local-chain prefix onto the fixed
+        final values of the rep their chain exits into.
+    """
+    m = succ_orig.shape[0]
+    lidx = jnp.arange(m, dtype=jnp.int32)
+    gid = base + lidx
+
+    # ---- R1: tail fixup for reps
+    tail_fn = local_lib.tail_lookup(aux, succ_orig, rank_orig, base)
+    resp, answered, g1 = gather_until_done(
+        plan, st.succ, rep, owner_of, tail_fn,
+        spec.gather_req_cap, spec.gather_resp_cap, dedup=True)
+    upd = answered & resp["found"] & rep
+    final_succ = jnp.where(upd, resp["succ"], st.succ)
+    final_rank = jnp.where(upd, st.rank + resp["rank"], st.rank)
+    miss1 = lax.psum(jnp.sum(rep & ~upd).astype(jnp.int32), plan.pe_axes)
+
+    # ---- R2: interior elements
+    S, D, stop_is_term = aux["S"], aux["D"], aux["stop_is_term"]
+    interior = ~rep
+    # chains ending at a true local terminal need no communication
+    direct = interior & stop_is_term
+    final_succ = jnp.where(direct, base + S, final_succ)
+    final_rank = jnp.where(direct, D, final_rank)
+    # chains exiting the PE: ask the rep the chain enters (aggregated)
+    need = interior & ~stop_is_term
+    exit_target = succ_orig[S]  # the remote rep
+
+    def final_fn(gids, valid):
+        slots = jnp.clip(gids - base_ref[0], 0, m - 1).astype(jnp.int32)
+        ok = valid & (gids >= base_ref[0]) & (gids < base_ref[0] + m)
+        return {"succ": jnp.where(ok, final_succ_ref[0][slots], gids),
+                "rank": jnp.where(ok, final_rank_ref[0][slots],
+                                  jnp.zeros_like(final_rank_ref[0][slots])),
+                "found": ok}
+
+    # lookup closes over the *fixed* rep finals on the owner side
+    base_ref = [base]
+    final_succ_ref = [final_succ]
+    final_rank_ref = [final_rank]
+    resp2, answered2, g2 = gather_until_done(
+        plan, exit_target, need, owner_of, final_fn,
+        spec.gather_req_cap, spec.gather_resp_cap, dedup=True)
+    upd2 = answered2 & resp2["found"] & need
+    final_succ = jnp.where(upd2, resp2["succ"], final_succ)
+    final_rank = jnp.where(upd2, D + rank_orig[S] + resp2["rank"], final_rank)
+    miss2 = lax.psum(jnp.sum(need & ~upd2).astype(jnp.int32), plan.pe_axes)
+
+    stats = _merge(stats, {
+        "fixup_msgs": g1["msgs"] + g2["msgs"],
+        "undelivered": g1["undelivered"] + g2["undelivered"] + miss1 + miss2})
+    return final_succ, final_rank, stats
+
+
+def _solve_sharded(succ, rank, seed, *, plan: MeshPlan, cfg: ListRankConfig,
+                   specs: list[LevelSpec], m: int):
+    pe = plan.my_id().astype(jnp.int32)
+    base = pe * m
+    lidx = jnp.arange(m, dtype=jnp.int32)
+    gid = base + lidx
+    key = jax.random.PRNGKey(seed)
+    stats = zero_stats()
+
+    def owner_of(g):
+        return g // m
+
+    succ_orig, rank_orig = succ, rank
+    if cfg.local_contraction:
+        succ_w, rank_w, rep, aux = local_lib.contract(
+            succ, rank, base, m, cfg.use_pallas)
+        active = rep
+    else:
+        succ_w, rank_w, rep, aux = succ, rank, None, None
+        active = jnp.ones(m, jnp.bool_)
+
+    is_term0 = active & (succ_w == gid)
+    spec0 = specs[0]
+
+    if cfg.algorithm == "doubling":
+        st = store_lib.make_dense_store(succ_w, rank_w, active, base)
+        st, pst = doubling_solve(plan, st, owner_of, spec0.gather_req_cap,
+                                 spec0.gather_resp_cap,
+                                 specs[-1].max_rounds, cfg.dedup_requests)
+        stats = _merge(stats, {"pd_rounds": pst["pd_rounds"],
+                               "pd_msgs": pst["pd_msgs"],
+                               "undelivered": pst["pd_undelivered"]})
+    elif cfg.avoid_reversal:
+        # forward chasing; the per-level direction flip at level 0 is
+        # exactly the paper's §2.5 reversal-avoiding postprocess.
+        st = store_lib.make_dense_store(succ_w, rank_w, active, base)
+        st, stats = solve_store(plan, cfg, specs, owner_of, st, key, 0, stats,
+                                want_sink=True)
+    else:
+        st = store_lib.make_dense_store(succ_w, rank_w, active, base)
+        st, stats = _reverse_instance(plan, spec0, owner_of, st, stats)
+        forced = is_term0  # Alg.1 l.2: initial elements of the reversed
+        # instance are the original terminals — locally known.
+        st, stats = solve_store(plan, cfg, specs, owner_of, st, key, 0, stats,
+                                forced=forced, want_sink=False)
+
+    if cfg.local_contraction:
+        succ_f, rank_f, stats = _restore_local(
+            plan, spec0, owner_of, st, aux, rep, succ_orig, rank_orig, base,
+            stats)
+    else:
+        succ_f, rank_f = st.succ, st.rank
+
+    # make stats replicated for a P() out-spec
+    stats = {k: lax.psum(v, plan.pe_axes) for k, v in stats.items()}
+    return succ_f, rank_f, stats
+
+
+# --------------------------------------------------------------------------
+# host driver
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _jitted_solver(mesh, plan, cfg, specs, m):
+    fn = functools.partial(_solve_sharded, plan=plan, cfg=cfg, specs=specs,
+                           m=m)
+    spec_sharded = P(plan.pe_axes)
+    mapped = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(spec_sharded, spec_sharded, P()),
+        out_specs=(spec_sharded, spec_sharded, P()),
+        check_vma=False)
+    return jax.jit(mapped)
+
+
+def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
+                         cfg: ListRankConfig | None = None,
+                         indirection: IndirectionSpec | None = None,
+                         seed: int = 0, max_retries: int = 3,
+                         term_bound: int | None = None):
+    """Rank lists distributed over ``mesh``. Returns (succ, rank, stats).
+
+    ``succ``/``rank`` may be numpy or jax arrays of length n (divisible
+    by the PE count); they are placed block-sharded over ``pe_axes``.
+    """
+    cfg = cfg or ListRankConfig()
+    pe_axes = tuple(pe_axes) if pe_axes is not None else tuple(mesh.axis_names)
+    plan = MeshPlan.from_mesh(mesh, pe_axes, indirection)
+    p = plan.p
+    n = succ.shape[0]
+    if n % p != 0:
+        raise ValueError(f"n={n} must be divisible by p={p} (pad the input)")
+    m = n // p
+    if term_bound is None:
+        s = np.asarray(jax.device_get(succ))
+        owners = np.arange(n) // m
+        counts = np.bincount(owners[s == np.arange(n)], minlength=p)
+        term_bound = int(counts.max()) if counts.size else 0
+
+    sharding = NamedSharding(mesh, P(pe_axes))
+    succ_d = jax.device_put(jnp.asarray(succ, jnp.int32), sharding)
+    rank_d = jax.device_put(jnp.asarray(rank), sharding)
+
+    slack_mult = 1.0
+    last_stats = None
+    for attempt in range(max_retries + 1):
+        specs = build_specs(cfg, plan, m, n, term_bound, slack_mult)
+        solver = _jitted_solver(mesh, plan, cfg, specs, m)
+        succ_f, rank_f, stats = solver(succ_d, rank_d, jnp.int32(seed))
+        host_stats = {k: int(jax.device_get(v)) for k, v in stats.items()}
+        host_stats["attempts"] = attempt + 1
+        fatal = sum(host_stats[k] for k in FATAL_KEYS)
+        if fatal == 0:
+            return succ_f, rank_f, host_stats
+        last_stats = host_stats
+        slack_mult *= 2.0
+    raise RuntimeError(
+        f"list ranking did not complete after {max_retries + 1} attempts; "
+        f"stats={last_stats}")
+
+
+def rank_list(succ, rank, mesh, **kw):
+    """Convenience wrapper: returns (succ, rank) only."""
+    succ_f, rank_f, _ = rank_list_with_stats(succ, rank, mesh, **kw)
+    return succ_f, rank_f

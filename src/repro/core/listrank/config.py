@@ -1,0 +1,96 @@
+"""Configuration for the distributed list-ranking algorithms."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class IndirectionSpec:
+    """How messages are routed across the PE mesh (paper §2.4).
+
+    ``hops`` is an ordered tuple of mesh-axis groups. Each hop fixes the
+    destination coordinate along its axis group via one ``all_to_all``.
+
+    - direct delivery: a single hop over all PE axes,
+    - 2D-grid indirection: ``(("col",), ("row",))`` — first to the right
+      column, then along the column to the right row,
+    - topology-aware indirection: intra-node axis first, then the
+      inter-node axis (paper: ``P_{i,u} -> P_{i,v} -> P_{j,v}``).
+    """
+
+    hops: tuple[tuple[str, ...], ...]
+
+    @staticmethod
+    def direct(pe_axes: Sequence[str]) -> "IndirectionSpec":
+        return IndirectionSpec(hops=(tuple(pe_axes),))
+
+    @staticmethod
+    def grid(pe_axes: Sequence[str]) -> "IndirectionSpec":
+        """One hop per mesh axis, last-axis (fastest-varying) first.
+
+        With PE id flattened row-major over ``pe_axes``, hopping over the
+        minor axis first is the paper's column-then-row routing.
+        """
+        return IndirectionSpec(hops=tuple((a,) for a in reversed(pe_axes)))
+
+    @staticmethod
+    def topology(intra_axes: Sequence[str], inter_axes: Sequence[str]) -> "IndirectionSpec":
+        """Intra-node hop first (fast links), then inter-node (paper §2.4)."""
+        return IndirectionSpec(hops=(tuple(intra_axes), tuple(inter_axes)))
+
+    @property
+    def depth(self) -> int:
+        return len(self.hops)
+
+
+@dataclasses.dataclass(frozen=True)
+class ListRankConfig:
+    """Tuning knobs for :func:`repro.core.listrank.api.rank_list`.
+
+    Defaults follow the paper's production configuration: sparse ruling
+    set with spawning, local contraction enabled, reversal avoided via
+    the terminal->initial postprocessing (§2.5), pointer doubling as the
+    base case after ``srs_rounds`` rounds of SRS.
+    """
+
+    algorithm: Literal["srs", "doubling"] = "srs"
+    #: number of recursive SRS rounds before the base case (paper uses 2).
+    srs_rounds: int = 2
+    base_case: Literal["doubling", "allgather"] = "doubling"
+
+    #: rulers per PE as a fraction of the (effective) local input size.
+    #: ``None`` derives r* from the cost model (analysis.r_star).
+    ruler_fraction: float | None = 1.0 / 32.0
+    #: hard floor on the per-PE ruler count.
+    min_rulers_per_pe: int = 4
+
+    #: exploit locality by contracting PE-local sublists first (§2.3).
+    local_contraction: bool = True
+    #: avoid the explicit list reversal via §2.5 postprocessing. When
+    #: False, runs the faithful Algorithm 1 with reversal preprocessing.
+    avoid_reversal: bool = True
+    #: deduplicate remote-gather requests per PE (§2.5 aggregation).
+    dedup_requests: bool = True
+
+    #: capacity slack over the expected per-peer message load.
+    capacity_slack: float = 2.0
+    #: floor for the per-peer mailbox capacity.
+    min_capacity: int = 8
+    #: outgoing-queue capacity as multiple of expected in-flight load.
+    queue_slack: float = 4.0
+    #: spawn-scan window per round (candidates examined per death batch).
+    spawn_window: int = 64
+
+    #: safety bound on chase rounds (multiplier over the n/r estimate).
+    max_round_slack: float = 8.0
+    #: bound on outer restarts (coverage safeguard for forward chasing).
+    max_restarts: int = 4
+    #: sub-problem capacity slack over the r*ln(n/r) expectation.
+    sub_capacity_slack: float = 2.0
+
+    #: use the Pallas local_chase kernel for local contraction.
+    use_pallas: bool = False
+
+    def with_(self, **kw) -> "ListRankConfig":
+        return dataclasses.replace(self, **kw)

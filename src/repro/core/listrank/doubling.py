@@ -1,0 +1,101 @@
+"""Distributed pointer doubling (Wyllie), engineered per the paper:
+request aggregation (dedup), message indirection, and overflow-tolerant
+rounds. Serves both as the standalone PD baseline of the paper's
+evaluation and as the SRS base case.
+
+Each round, every unfinished element asks the owner of its current
+successor for (succ[succ[i]], rank[succ[i]]) and applies
+  rank[i] += rank[succ[i]];  succ[i] = succ[succ[i]].
+Terminals absorb (self-loop, weight 0), so ceil(log2(maxlen)) rounds
+suffice. Requests that overflow a mailbox are simply retried next round
+— doubling is idempotent w.r.t. skipped updates, trading rounds for
+capacity, never correctness.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.listrank import store as store_lib
+from repro.core.listrank.exchange import MeshPlan, remote_gather
+
+
+def doubling_solve(plan: MeshPlan, st: store_lib.Store,
+                   owner_of, req_cap: int, resp_cap: int,
+                   max_steps: int, dedup: bool = True):
+    """Run pointer doubling over a store. Returns (store, stats)."""
+
+    def cond(carry):
+        st, pending, steps, stats = carry
+        return (pending > 0) & (steps < max_steps)
+
+    def body(carry):
+        st, _, steps, stats = carry
+        done = (st.succ == st.ids) | ~st.valid
+        resp, answered, gst = remote_gather(
+            plan, st.succ, st.valid & ~done,
+            owner_of,
+            lambda g, v: store_lib.lookup(st, g, v),
+            req_cap, resp_cap, dedup=dedup)
+        upd = answered & resp["found"] & ~done
+        new_succ = jnp.where(upd, resp["succ"], st.succ)
+        new_rank = jnp.where(upd, st.rank + resp["rank"], st.rank)
+        # finished once the successor is a fixed point (terminal)
+        now_done = done | (upd & (resp["succ"] == st.succ))
+        st2 = st.replace(succ=new_succ, rank=new_rank)
+        pending = lax.psum(jnp.sum((~now_done) & st.valid).astype(jnp.int32),
+                           plan.pe_axes)
+        stats = {
+            "pd_rounds": stats["pd_rounds"] + 1,
+            "pd_msgs": stats["pd_msgs"] + gst["req_sent"] + gst["resp_sent"],
+            "pd_undelivered": stats["pd_undelivered"] + gst["undelivered"],
+        }
+        return st2, pending, steps + 1, stats
+
+    stats0 = {"pd_rounds": jnp.int32(0), "pd_msgs": jnp.int32(0),
+              "pd_undelivered": jnp.int32(0)}
+    st, pending, steps, stats = lax.while_loop(
+        cond, body, (st, jnp.int32(1), jnp.int32(0), stats0))
+    stats["pd_converged"] = (pending == 0)
+    return st, stats
+
+
+def allgather_solve(plan: MeshPlan, st: store_lib.Store, max_len_bound: int = 0):
+    """Small-base-case alternative: replicate the sub-instance on every
+    PE (one all-gather) and finish with local vectorized Wyllie.
+
+    Engineering option beyond the paper's PD base case; profitable when
+    the subproblem is tiny and PD's log(n') latency-bound rounds
+    dominate. Cost: one all-gather of the store + O(cap·p·log) local work.
+    """
+    ids = lax.all_gather(st.ids, plan.pe_axes, tiled=True)
+    succ = lax.all_gather(st.succ, plan.pe_axes, tiled=True)
+    rank = lax.all_gather(st.rank, plan.pe_axes, tiled=True)
+    valid = lax.all_gather(st.valid, plan.pe_axes, tiled=True)
+    order = jnp.argsort(jnp.where(valid, ids, jnp.iinfo(jnp.int32).max))
+    ids_s, succ_s, rank_s, valid_s = ids[order], succ[order], rank[order], valid[order]
+    n = ids_s.shape[0]
+    slot = jnp.clip(jnp.searchsorted(ids_s, succ_s), 0, n - 1).astype(jnp.int32)
+    found = (ids_s[slot] == succ_s) & valid_s
+    slot = jnp.where(found, slot, jnp.arange(n, dtype=jnp.int32))
+    # the gathered instance has n slots; lists can be up to n long
+    steps = max(1, int(n).bit_length()) + 1
+
+    def body(_, sr):
+        s, r = sr
+        return s[s], r + r[s]
+
+    slot_f, rank_f = lax.fori_loop(0, steps, body, (slot, rank_s))
+    succ_f = ids_s[slot_f]
+    # write back into this PE's slots: invert the sort permutation to
+    # find where this PE's gathered rows (me*cap + j) landed.
+    cap = st.ids.shape[0]
+    me = plan.my_id()
+    inv = jnp.zeros(n, jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    my_slots = inv[me * cap + jnp.arange(cap, dtype=jnp.int32)]
+    out = st.replace(succ=jnp.where(st.valid, succ_f[my_slots], st.succ),
+                     rank=jnp.where(st.valid, rank_f[my_slots], st.rank))
+    stats = {"pd_rounds": jnp.int32(steps), "pd_msgs": jnp.int32(0),
+             "pd_undelivered": jnp.int32(0), "pd_converged": jnp.bool_(True)}
+    return out, stats

@@ -1,0 +1,157 @@
+"""Input-instance generators (paper §3, Input Instances).
+
+All generators return ``(succ, rank)`` numpy arrays over ``n`` elements,
+with terminals pointing to themselves and carrying weight 0.
+
+- :func:`gen_list`: the paper's List(n/p, gamma) — an identity chain
+  with a gamma-fraction of labels randomly permuted. gamma=0 gives each
+  PE a contiguous sublist (perfect locality); gamma=1 a fully random
+  permutation (no locality).
+- :func:`gen_random_lists`: a forest of random lists (multi-list case).
+- :func:`gen_euler_tour`: the Euler tour of a random tree; two tree
+  models mimic the paper's GNM (no locality) and RGG2D (high locality)
+  BFS-tree instances.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _as_succ_dtype(a: np.ndarray) -> np.ndarray:
+    return a.astype(np.int32)
+
+
+def gen_list(n: int, gamma: float, seed: int = 0, num_lists: int = 1):
+    """Paper instance List(n, gamma): chain succ[i]=i+1 with a random
+    relabeling applied to a gamma-fraction of positions.
+
+    ``num_lists`` splits the chain into that many independent lists by
+    cutting at evenly spaced points (each cut creates a terminal).
+    """
+    if not 0.0 <= gamma <= 1.0:
+        raise ValueError("gamma must be in [0,1]")
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n, dtype=np.int64)
+    k = int(round(gamma * n))
+    if k > 1:
+        pos = rng.choice(n, size=k, replace=False)
+        labels[pos] = labels[rng.permutation(pos)]
+    # chain over labels: labels[j] -> labels[j+1]
+    succ = np.empty(n, dtype=np.int64)
+    cuts = np.linspace(0, n, num_lists + 1).astype(np.int64)[1:]
+    ends = set((cuts - 1).tolist())
+    for j in range(n):
+        if j in ends or j == n - 1:
+            succ[labels[j]] = labels[j]
+        else:
+            succ[labels[j]] = labels[j + 1]
+    idx = np.arange(n)
+    rank = (succ != idx).astype(np.int64)
+    return _as_succ_dtype(succ), rank.astype(np.int32)
+
+
+def gen_random_lists(n: int, num_lists: int, seed: int = 0, weighted: bool = False):
+    """A forest of ``num_lists`` random lists over a random permutation."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    succ = np.empty(n, dtype=np.int64)
+    cuts = np.sort(rng.choice(np.arange(1, n), size=num_lists - 1, replace=False)) if num_lists > 1 else np.array([], dtype=np.int64)
+    bounds = np.concatenate([[0], cuts, [n]])
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        seg = perm[a:b]
+        succ[seg[:-1]] = seg[1:]
+        succ[seg[-1]] = seg[-1]
+    idx = np.arange(n)
+    if weighted:
+        rank = rng.integers(0, 100, size=n).astype(np.int64)
+        rank[succ == idx] = 0
+    else:
+        rank = (succ != idx).astype(np.int64)
+    return _as_succ_dtype(succ), rank.astype(np.int32)
+
+
+def _random_tree_parents(n: int, rng: np.random.Generator, locality: bool) -> np.ndarray:
+    """parent[i] for i>=1; node 0 is the root.
+
+    ``locality=False``: random attachment (GNM-BFS-like, no locality).
+    ``locality=True``: attach to a recent node (RGG2D-BFS-like: tree
+    edges connect index-close nodes, so a block-distributed Euler tour
+    has high locality).
+    """
+    parent = np.zeros(n, dtype=np.int64)
+    if locality:
+        window = max(1, n // 64)
+        lo = np.maximum(0, np.arange(1, n) - window)
+        parent[1:] = lo + (rng.random(n - 1) * (np.arange(1, n) - lo)).astype(np.int64)
+    else:
+        parent[1:] = (rng.random(n - 1) * np.arange(1, n)).astype(np.int64)
+    return parent
+
+
+def gen_euler_tour(n_nodes: int, seed: int = 0, locality: bool = False):
+    """Euler tour of a random ``n_nodes`` tree as a list-ranking instance.
+
+    The tour has ``2*(n_nodes-1)`` arcs; arc (u,v) is followed by the
+    next arc around v after (v,u) in the circular adjacency order. The
+    tour is rooted at node 0 by cutting the arc returning to the root.
+
+    Returns (succ, rank, arcs): arcs[i] = (u, v) for tour element i.
+    """
+    rng = np.random.default_rng(seed)
+    parent = _random_tree_parents(n_nodes, rng, locality)
+    # arcs: for each non-root node c with parent q: down-arc (q->c) id 2k,
+    # up-arc (c->q) id 2k+1 where k = c-1.
+    n_arcs = 2 * (n_nodes - 1)
+    if n_arcs == 0:
+        return np.zeros(0, np.int32), np.zeros(0, np.int32), np.zeros((0, 2), np.int64)
+    # children sorted by child id define the adjacency order at each node.
+    order = np.argsort(parent[1:], kind="stable")  # children grouped by parent
+    children: list[list[int]] = [[] for _ in range(n_nodes)]
+    for c in (order + 1):
+        children[parent[c]].append(int(c))
+
+    # next arc after entering node v via arc a: standard Euler tour:
+    #   after down-arc (q->c): first child arc of c, else up-arc (c->q)
+    #   after up-arc (c->q): next sibling down-arc, else up-arc (q->pq)
+    def down_id(c): return 2 * (c - 1)
+    def up_id(c): return 2 * (c - 1) + 1
+
+    succ = np.empty(n_arcs, dtype=np.int64)
+    for c in range(1, n_nodes):
+        ch = children[c]
+        succ[down_id(c)] = down_id(ch[0]) if ch else up_id(c)
+        q = parent[c]
+        sibs = children[q]
+        j = sibs.index(c)
+        if j + 1 < len(sibs):
+            succ[up_id(c)] = down_id(sibs[j + 1])
+        elif q == 0:
+            succ[up_id(c)] = up_id(c)  # tour ends back at the root
+        else:
+            succ[up_id(c)] = up_id(q)
+    idx = np.arange(n_arcs)
+    rank = (succ != idx).astype(np.int64)
+    arcs = np.empty((n_arcs, 2), dtype=np.int64)
+    for c in range(1, n_nodes):
+        arcs[down_id(c)] = (parent[c], c)
+        arcs[up_id(c)] = (c, parent[c])
+    return _as_succ_dtype(succ), rank.astype(np.int32), arcs
+
+
+def pad_to_multiple(succ: np.ndarray, rank: np.ndarray, p: int):
+    """Pad with self-loop singletons so n is divisible by p."""
+    n = succ.shape[0]
+    pad = (-n) % p
+    if pad == 0:
+        return succ, rank
+    extra = np.arange(n, n + pad, dtype=succ.dtype)
+    return np.concatenate([succ, extra]), np.concatenate([rank, np.zeros(pad, rank.dtype)])
+
+
+def locality_fraction(succ: np.ndarray, p: int) -> float:
+    """Fraction of elements whose successor lives on the same PE
+    (block distribution) — the paper's delta."""
+    n = succ.shape[0]
+    m = n // p
+    owner = np.arange(n) // m
+    return float(np.mean(owner == (np.asarray(succ) // m)))

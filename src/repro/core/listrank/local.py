@@ -1,0 +1,87 @@
+"""Local sublist contraction (paper §2.3) and its restoration.
+
+Runs entirely PE-locally (no communication). The paper chases local
+chains sequentially in O(n/p); a TPU has no fast scalar loop over HBM,
+so we *vectorize* the chase as pointer doubling restricted to local
+links: O((n/p)·log(chain)) vector work on the VPU — the hardware
+adaptation discussed in DESIGN.md. The doubling inner loop can run as a
+Pallas VMEM kernel (``repro.kernels.local_chase``) via ``use_pallas``.
+
+Definitions (per PE with local index range [0, m), global base b):
+  stop element: local element whose successor is non-local or itself
+  S[i]: local index of the stop element ending i's local chain
+  D[i]: weighted distance from i to S[i] (sum of weights of links
+        i -> ... -> S[i], excluding S[i]'s own outgoing link)
+  rep:  local elements with no local predecessor (local-initial) —
+        the contracted instance consists exactly of the reps.
+
+Contracted instance (only reps active):
+  succ_c[l] = succ[S[l]]  (remote, or l itself if S[l] is terminal)
+  rank_c[l] = D[l] + rank[S[l]]  (0 if S[l] is terminal)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _doubling(succ_l: jax.Array, dist: jax.Array, steps: int, use_pallas: bool):
+    """Wyllie iterations over local links with self-absorbing stops."""
+    if use_pallas:
+        from repro.kernels.local_chase import ops as lc_ops
+        return lc_ops.local_chase(succ_l, dist, steps)
+
+    def body(_, sd):
+        s, d = sd
+        return s[s], d + d[s]
+
+    return jax.lax.fori_loop(0, steps, body, (succ_l, dist))
+
+
+def contract(succ: jax.Array, rank: jax.Array, base: jax.Array, m: int,
+             use_pallas: bool = False):
+    """Contract local sublists. Returns (succ_c, rank_c, rep, aux) where
+    aux = dict(S, D, stop_is_term) is needed by :func:`restore_local`."""
+    lidx = jnp.arange(m, dtype=jnp.int32)
+    gid = base + lidx
+    is_term = succ == gid
+    succ_local = succ - base
+    is_local = (succ_local >= 0) & (succ_local < m)
+    stop = (~is_local) | is_term
+
+    succ_l = jnp.where(stop, lidx, jnp.clip(succ_local, 0, m - 1).astype(jnp.int32))
+    dist0 = jnp.where(stop, jnp.zeros_like(rank), rank)
+    steps = max(1, (m - 1).bit_length())
+    S, D = _doubling(succ_l, dist0, steps, use_pallas)
+
+    # rep = no local predecessor (self-loops don't count as local preds)
+    has_local_pred = jnp.zeros(m + 1, jnp.bool_).at[
+        jnp.where(is_local & ~is_term, succ_local, m)
+    ].set(True, mode="drop")[:m]
+    rep = ~has_local_pred
+
+    stop_is_term = is_term[S]
+    succ_c = jnp.where(stop_is_term, gid, succ[S])
+    rank_c = jnp.where(stop_is_term, jnp.zeros_like(rank), D + rank[S])
+    # non-reps are parked as inert self-loops; the `rep` mask excludes
+    # them from the distributed instance entirely.
+    succ_c = jnp.where(rep, succ_c, gid)
+    rank_c = jnp.where(rep, rank_c, jnp.zeros_like(rank_c))
+    aux = dict(S=S, D=D, stop_is_term=stop_is_term)
+    return succ_c, rank_c, rep, aux
+
+
+def tail_lookup(aux, succ_orig, rank_orig, base):
+    """Owner-side data for restore: for a queried element x (a rep whose
+    chain ends at a true terminal), return (terminal gid, distance)."""
+    def fn(gids: jax.Array, valid: jax.Array):
+        m = aux["S"].shape[0]
+        slot = jnp.clip(gids - base, 0, m - 1).astype(jnp.int32)
+        ok = valid & (gids >= base) & (gids < base + m)
+        t_gid = base + aux["S"][slot]
+        return {
+            "succ": jnp.where(ok, t_gid, gids),
+            "rank": jnp.where(ok, aux["D"][slot], jnp.zeros_like(aux["D"][slot])),
+            "found": ok,
+        }
+    return fn

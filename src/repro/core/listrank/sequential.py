@@ -1,0 +1,67 @@
+"""Sequential list-ranking oracle (numpy pointer chasing).
+
+Used as the correctness reference for every distributed algorithm and
+for the Pallas kernels' ``ref.py`` cross-checks.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def rank_list_seq(succ: np.ndarray, rank: np.ndarray | None = None):
+    """Rank all lists by sequential traversal. O(n) time.
+
+    Args:
+      succ: int array of successor indices; terminals satisfy succ[i]==i.
+      rank: optional link weights; terminals must hold 0. Defaults to the
+        unweighted instance (1 for non-terminals, 0 for terminals).
+
+    Returns:
+      (succ_out, rank_out): succ_out[i] is the terminal of i's list,
+      rank_out[i] the weighted distance from i to that terminal.
+    """
+    succ = np.asarray(succ)
+    n = succ.shape[0]
+    idx = np.arange(n, dtype=succ.dtype)
+    if rank is None:
+        rank = (succ != idx).astype(np.int64)
+    rank = np.asarray(rank)
+    if not np.all(rank[succ == idx] == 0):
+        raise ValueError("terminal elements must carry weight 0")
+
+    succ_out = np.empty_like(succ)
+    rank_out = np.zeros(n, dtype=rank.dtype)
+    # Build predecessor lists to traverse each list from its terminal
+    # backwards without recursion: count in-degrees, then walk.
+    has_pred = np.zeros(n, dtype=bool)
+    nonterm = succ != idx
+    has_pred[succ[nonterm]] = True
+    # predecessor map (each element has at most one predecessor)
+    pred = np.full(n, -1, dtype=np.int64)
+    src = idx[nonterm]
+    pred[succ[nonterm]] = src
+    terminals = idx[succ == idx]
+    for t in terminals:
+        # walk backwards from terminal accumulating distance
+        succ_out[t] = t
+        rank_out[t] = 0
+        cur = pred[t]
+        dist = rank_out[t]
+        prev = t
+        while cur != -1:
+            dist = dist + rank[cur]
+            succ_out[cur] = t
+            rank_out[cur] = dist
+            prev = cur
+            cur = pred[cur]
+    # detect cycles: every element must have been assigned
+    visited = np.zeros(n, dtype=bool)
+    visited[terminals] = True
+    for t in terminals:
+        cur = pred[t]
+        while cur != -1:
+            visited[cur] = True
+            cur = pred[cur]
+    if not visited.all():
+        raise ValueError("input contains a cycle (not a set of lists)")
+    return succ_out, rank_out

@@ -1,0 +1,86 @@
+"""Element stores: addressable per-PE views of a (sub-)instance.
+
+Level 0 of the recursion owns a *dense* contiguous block of element ids
+(direct indexing); deeper SRS levels operate on *sparse* stores — the
+extracted ruler subproblem whose global ids are scattered — addressed
+via binary search over the per-PE sorted id array.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("ids", "succ", "rank", "valid"),
+         meta_fields=("dense",))
+@dataclasses.dataclass
+class Store:
+    """Per-PE view of a (sub-)instance.
+
+    ids   (cap,) int32  global element ids (ascending among valid slots;
+                        invalid slots hold INT32_MAX for sparse stores)
+    succ  (cap,) int32  current successor (global id)
+    rank  (cap,)        current weight/rank
+    valid (cap,) bool   slot occupancy
+    dense bool          static: ids are the contiguous range base..base+cap
+    """
+    ids: jax.Array
+    succ: jax.Array
+    rank: jax.Array
+    valid: jax.Array
+    dense: bool = False
+
+    @property
+    def cap(self) -> int:
+        return self.ids.shape[0]
+
+    def replace(self, **kw) -> "Store":
+        return dataclasses.replace(self, **kw)
+
+
+def make_dense_store(succ: jax.Array, rank: jax.Array, active: jax.Array,
+                     base: jax.Array) -> Store:
+    m = succ.shape[0]
+    ids = base + jnp.arange(m, dtype=jnp.int32)
+    return Store(ids=ids, succ=succ, rank=rank, valid=active, dense=True)
+
+
+def slot_of(store: Store, gids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Map global ids to local slots. Returns (slot, found)."""
+    cap = store.cap
+    if store.dense:
+        slot = (gids - store.ids[0]).astype(jnp.int32)
+        inr = (slot >= 0) & (slot < cap)
+        slot = jnp.clip(slot, 0, cap - 1)
+        return slot, inr & store.valid[slot]
+    # sparse: ids ascending among valid slots; invalid slots hold INT32_MAX
+    slot = jnp.searchsorted(store.ids, gids).astype(jnp.int32)
+    slot = jnp.clip(slot, 0, cap - 1)
+    found = (store.ids[slot] == gids) & store.valid[slot]
+    return slot, found
+
+
+def lookup(store: Store, gids: jax.Array, valid: jax.Array) -> dict[str, jax.Array]:
+    """Owner-side lookup for remote_gather: (succ, rank) at global ids."""
+    slot, found = slot_of(store, gids)
+    ok = found & valid
+    return {
+        "succ": jnp.where(ok, store.succ[slot], gids),
+        "rank": jnp.where(ok, store.rank[slot], jnp.zeros_like(store.rank[slot])),
+        "found": ok,
+    }
+
+
+def scatter_update(store: Store, slots: jax.Array, upd_valid: jax.Array,
+                   **fields: jax.Array) -> Store:
+    """Set fields at slots (masked). Returns the updated store."""
+    cap = store.cap
+    idx = jnp.where(upd_valid, slots, cap)
+    kw = {}
+    for k, v in fields.items():
+        kw[k] = getattr(store, k).at[idx].set(v, mode="drop")
+    return store.replace(**kw)

@@ -1,0 +1,3 @@
+from repro.data import packing, pipeline
+
+__all__ = ["packing", "pipeline"]

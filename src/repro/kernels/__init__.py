@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package ships three modules:
+  kernel.py — the pl.pallas_call with explicit BlockSpec VMEM tiling
+              (TPU target, validated in interpret mode on CPU),
+  ops.py    — the jit'd public wrapper (dispatch, batching, fallbacks),
+  ref.py    — the pure-jnp oracle used by the tests.
+
+Kernels:
+  local_chase     — in-VMEM vectorized pointer doubling: the paper's
+                    local-contraction hot loop (§2.3) adapted to the VPU.
+  flash_attention — blockwise causal/sliding-window GQA attention with
+                    logit soft-capping (Gemma-2) — the LM substrate's
+                    dominant non-GEMM kernel.
+  ssd_scan        — Mamba-2 SSD chunked scan; structurally the same
+                    contract→base→propagate pattern as locality-aware
+                    list ranking (DESIGN.md §3).
+"""

@@ -1,0 +1,51 @@
+"""Public attention op: Pallas flash attention with an XLA fallback and
+a custom-vjp backward (recompute-based) so it is usable in training.
+
+The forward runs the Pallas kernel (interpret mode on CPU); the backward
+uses the pure-jnp reference (XLA fuses it adequately; a dedicated bwd
+kernel is a further optimization documented in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _kernel
+from repro.kernels.flash_attention import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal=True, window=None, softcap=None,
+                    scale=None, q_offset=0, use_pallas=True):
+    """Attention with GQA/causal/window/softcap. q: (B,Hq,Lq,D)."""
+    if use_pallas:
+        return _kernel.flash_attention_pallas(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_offset=q_offset, interpret=not _on_tpu())
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale, q_offset=q_offset)
+
+
+def _fwd(q, k, v, causal, window, softcap, scale, q_offset, use_pallas):
+    out = flash_attention(q, k, v, causal, window, softcap, scale, q_offset,
+                          use_pallas)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, softcap, scale, q_offset, use_pallas, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: _ref.attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_offset=q_offset), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

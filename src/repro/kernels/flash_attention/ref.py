@@ -1,0 +1,59 @@
+"""Pure-jnp oracle: multi-head attention with GQA, causal masking,
+sliding windows, and logit soft-capping (Gemma-2 style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  softcap: float | None = None, scale: float | None = None,
+                  q_offset: int = 0) -> jax.Array:
+    """Reference attention.
+
+    Args:
+      q: (B, Hq, Lq, D); k/v: (B, Hkv, Lk, D) with Hq % Hkv == 0.
+      causal: apply causal mask (q position >= k position).
+      window: sliding-window size (attend to the last ``window`` keys).
+      softcap: logit soft-capping cap*tanh(s/cap).
+      scale: logit scale (default 1/sqrt(D)).
+      q_offset: absolute position of q[0] (decode: kv_len - q_len);
+        scalar or per-batch (B,) array (heterogeneous decode slots).
+    """
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qo = jnp.asarray(q_offset)
+    if qo.ndim == 1:  # per-batch offsets -> (B, 1, lq, lk) mask
+        q_pos = qo[:, None, None, None] + jnp.arange(lq)[:, None]
+        k_pos = jnp.arange(lk)[None, :]
+        mask = jnp.ones((b, 1, lq, lk), jnp.bool_)
+    else:
+        q_pos = qo + jnp.arange(lq)[:, None]
+        k_pos = jnp.arange(lk)[None, :]
+        mask = jnp.ones((lq, lk), jnp.bool_)
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    if mask.ndim == 2:
+        mask = mask[None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows that attend to nothing (fully masked) produce zeros
+    any_valid = mask.any(axis=-1)[..., None]
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    out = jnp.where(any_valid, out, 0.0)
+    return out.astype(q.dtype)

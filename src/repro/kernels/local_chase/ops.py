@@ -1,0 +1,30 @@
+"""Public wrapper for local_chase: dispatch between the Pallas VMEM
+kernel and the XLA fallback, with the interpret-mode switch for CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.local_chase import kernel as _kernel
+from repro.kernels.local_chase import ref as _ref
+
+#: per-core VMEM budget for the resident working set (succ+dist, bytes).
+VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def local_chase(succ: jax.Array, dist: jax.Array, steps: int):
+    """Wyllie doubling with self-absorbing stops; returns (succ, dist).
+
+    Uses the Pallas VMEM kernel when the working set fits; interpret
+    mode on CPU (this container), compiled on a real TPU.
+    """
+    m = succ.shape[-1]
+    itemsize = jnp.dtype(succ.dtype).itemsize + jnp.dtype(dist.dtype).itemsize
+    if m * itemsize <= VMEM_BUDGET:
+        return _kernel.local_chase_pallas(succ, dist, steps,
+                                          interpret=not _on_tpu())
+    return _ref.local_chase_ref(succ, dist, steps)

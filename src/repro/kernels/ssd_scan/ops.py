@@ -1,0 +1,63 @@
+"""Public SSD op: Pallas chunked scan with reference fallback and a
+recompute-based custom vjp (training-usable)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan import kernel as _kernel
+from repro.kernels.ssd_scan import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def ssd_scan(x, dt, A, B, C, D=None, chunk=128, use_pallas=True):
+    """Mamba-2 SSD: returns y of shape (Bt, L, H, P)."""
+    l = x.shape[1]
+    if use_pallas and l % min(chunk, l) == 0:
+        return _kernel.ssd_scan_pallas(x, dt, A, B, C, D, chunk=chunk,
+                                       interpret=not _on_tpu())
+    return _ref.ssd_ref(x, dt, A, B, C, D)
+
+
+def _fwd(x, dt, A, B, C, D, chunk, use_pallas):
+    return ssd_scan(x, dt, A, B, C, D, chunk, use_pallas), (x, dt, A, B, C, D)
+
+
+def _bwd(chunk, use_pallas, res, g):
+    x, dt, A, B, C, D = res
+    if D is None:
+        _, vjp = jax.vjp(lambda x, dt, A, B, C:
+                         _ref.ssd_ref(x, dt, A, B, C, None), x, dt, A, B, C)
+        return vjp(g) + (None,)
+    _, vjp = jax.vjp(lambda x, dt, A, B, C, D:
+                     _ref.ssd_ref(x, dt, A, B, C, D), x, dt, A, B, C, D)
+    return vjp(g)
+
+
+ssd_scan.defvjp(_fwd, _bwd)
+
+
+def ssd_decode_step(x, dt, A, B, C, D, state):
+    """Single-token decode: update the (Bt,H,N,P) state and emit y.
+
+    x: (Bt,H,P); dt: (Bt,H); B,C: (Bt,G,N). Returns (y, new_state)."""
+    import jax.numpy as jnp
+    bt, h, p = x.shape
+    g = B.shape[1]
+    rep = h // g
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=1)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=1)
+    decay = jnp.exp(dtf * A.astype(jnp.float32))[..., None, None]
+    upd = (dtf[..., None] * Bf)[..., None] * xf[..., None, :]
+    state = decay * state.astype(jnp.float32) + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Cf, state)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x.dtype), state

@@ -1,0 +1,126 @@
+"""Pure-jnp oracle for the Mamba-2 SSD scan (arXiv:2405.21060).
+
+Sequential state-space recurrence, per head h in group g = h // (H/G):
+
+  S_t = exp(dt[t,h] * A[h]) * S_{t-1} + dt[t,h] * B[t,g]^T x[t,h]
+  y[t,h] = C[t,g] S_t + D[h] * x[t,h]
+
+with S in R^{N x P} (state dim x head dim), A[h] < 0, dt > 0 (already
+softplus-ed). Computed with an fp32 lax.scan over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array, D: jax.Array | None = None,
+            initial_state: jax.Array | None = None,
+            return_state: bool = False):
+    """x: (Bt,L,H,P); dt: (Bt,L,H); A: (H,); B/C: (Bt,L,G,N); D: (H,)."""
+    bt, l, h, p = x.shape
+    _, _, g, n = B.shape
+    assert h % g == 0
+    rep = h // g
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)  # (Bt,L,H,N)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+
+    if initial_state is None:
+        s0 = jnp.zeros((bt, h, n, p), jnp.float32)
+    else:
+        s0 = initial_state.astype(jnp.float32)
+
+    def step(s, inputs):
+        xt, dtt, bt_, ct = inputs  # (Bt,H,P), (Bt,H), (Bt,H,N), (Bt,H,N)
+        decay = jnp.exp(dtt * Af)[..., None, None]          # (Bt,H,1,1)
+        upd = (dtt[..., None] * bt_)[..., None] * xt[..., None, :]  # (Bt,H,N,P)
+        s = decay * s + upd
+        y = jnp.einsum("bhn,bhnp->bhp", ct, s)
+        return s, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (Bt,L,H,P)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] * xf
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, s_fin
+    return y
+
+
+def ssd_chunked_ref(x, dt, A, B, C, D=None, chunk=256,
+                    initial_state=None, return_state=False):
+    """Vectorized two-level SSD (the kernel's math, pure jnp, no
+    sequential time scan — the model's default non-Pallas path).
+
+    Intra-chunk runs the masked-decay attention-dual matmuls; the
+    inter-chunk recurrence is closed-form as a (C x C) lower-triangular
+    decay matrix over chunk states, so the whole computation is dense
+    einsums — XLA-countable and TPU/SPMD friendly (an O(C^2/L) FLOP
+    overhead buys the removal of an L-step dependency chain).
+    """
+    bt, l, h, p = x.shape
+    _, _, g, n = B.shape
+    rep = h // g
+    chunk = min(chunk, l)
+    assert l % chunk == 0
+    nc = l // chunk
+    xf = x.astype(jnp.float32).reshape(bt, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bt, nc, chunk, h)
+    Af = A.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2) \
+        .reshape(bt, nc, chunk, h, n)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2) \
+        .reshape(bt, nc, chunk, h, n)
+
+    lc = jnp.cumsum(dtf * Af, axis=2)                 # (bt,nc,Q,h)
+    # ---- intra-chunk (masked decay kernel)
+    seg = lc[:, :, :, None, :] - lc[:, :, None, :, :]  # (bt,nc,Q,Q,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    mask = tri[None, None, :, :, None]
+    mdecay = jnp.where(mask, jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcthn,bcshn->bctsh", Cf, Bf)
+    w = cb * mdecay
+    dtx = dtf[..., None] * xf
+    y = jnp.einsum("bctsh,bcshp->bcthp", w, dtx)
+    # ---- chunk states
+    to_end = jnp.exp(lc[:, :, -1:, :] - lc)           # (bt,nc,Q,h)
+    s_chunk = jnp.einsum("bcshn,bcshp->bchnp",
+                         Bf * (to_end * dtf)[..., None], xf)
+    # ---- inter-chunk: lower-tri decay matrix over chunks
+    dtot = lc[:, :, -1, :]                            # (bt,nc,h) log decay
+    cum = jnp.cumsum(dtot, axis=1)                    # inclusive
+    # decay from end of chunk i to start of chunk j (i < j):
+    # exp(sum_{m=i+1}^{j-1} dtot[m]) = exp(cum[j-1] - cum[i])
+    cj = jnp.concatenate([jnp.zeros_like(cum[:, :1]), cum], axis=1)
+    # decay(i->j) = exp(sum_{m=i+1}^{j-1} dtot[m]) = exp(cj[j] - cj[i+1])
+    trij = jnp.tril(jnp.ones((nc, nc), bool), k=-1)
+    expo = cj[:, :-1, None, :] - cj[:, None, 1:, :]
+    tmat = jnp.where(trij[None, :, :, None], jnp.exp(expo), 0.0)
+    s_before = jnp.einsum("bjih,bihnp->bjhnp", tmat, s_chunk)
+    if initial_state is not None:
+        s0 = initial_state.astype(jnp.float32)        # (bt,h,n,p)
+        dec0 = jnp.exp(cj[:, :-1])                    # decay to chunk start
+        s_before = s_before + dec0[..., None, None] * s0[:, None]
+    y = y + jnp.exp(lc)[..., None] * jnp.einsum(
+        "bcthn,bchnp->bcthp", Cf, s_before)
+    y = y.reshape(bt, l, h, p)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] \
+            * x.astype(jnp.float32)
+    y = y.astype(x.dtype)
+    if return_state:
+        s_fin = jnp.exp(cum[:, -1])[..., None, None] * (
+            initial_state.astype(jnp.float32) if initial_state is not None
+            else 0.0)
+        s_fin = s_fin + jnp.einsum(
+            "bih,bihnp->bhnp",
+            jnp.exp(cum[:, -1:, :] - cum), s_chunk)
+        return y, s_fin
+    return y

@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Target: TPU v5e pods — 256 chips per pod arranged (16, 16); multi-pod
+runs add a leading "pod" axis over the DCI. Functions (never module-
+level constants) so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+#: v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~ per-chip eff. for ring)
+DCI_BW = 25e9                 # inter-pod bytes/s per chip (conservative)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=None, axes=("data", "model")):
+    """Mesh over whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_listrank_mesh(*, multi_pod: bool = False):
+    """The same production mesh viewed as a flat PE grid for the list-
+    ranking core: every chip is one PE; the axis factorization is what
+    grid / topology-aware indirection route over (DESIGN.md §5)."""
+    return make_production_mesh(multi_pod=multi_pod)

@@ -1,0 +1,363 @@
+"""The model zoo: one configurable LM covering all assigned families.
+
+Families:
+  decoder — dense/GQA decoder (gemma2, qwen2.5, tinyllama, phi4,
+            pixtral backbone) with optional MoE FFN (granite, kimi-k2)
+            and optional local/global alternating attention (gemma2).
+  hybrid  — parallel attention+SSM heads per layer (hymba).
+  mamba   — attention-free Mamba-2 stack (mamba2-130m).
+  encdec  — encoder-decoder with cross-attention (seamless-m4t
+            backbone; audio frontend stubbed as frame embeddings).
+
+Layers are scanned (lax.scan over stacked params) with optional remat —
+this keeps the HLO size O(1) in depth, which the 512-device dry-run
+relies on. Per-layer binary attributes (local vs global attention) ride
+along as scanned boolean arrays and select behaviour via lax.cond.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.params import abstract_params, init_params, spec
+
+VOCAB_PAD = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    family: str = "decoder"          # decoder | hybrid | mamba | encdec
+    num_layers: int = 2
+    num_encoder_layers: int = 0
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int | None = None
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    attn_scale: float | None = None
+    local_window: int | None = None
+    layer_pattern: str = "global"    # global | local_global | sparse_global
+    post_norms: bool = False         # gemma2-style post-block norms
+    scale_embeddings: bool = False   # gemma2 multiplies embeds by sqrt(d)
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    # MoE
+    moe: bool = False
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # SSM
+    ssm_state: int = 128
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_chunk: int = 128
+    # modality stub (vlm patches / audio frames)
+    prefix_embed_dim: int | None = None
+    # numerics / runtime
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    #: nothing | save_moe | offload_moe — what remat keeps of the MoE
+    #: block output (§Perf P3: avoids recomputing dispatch all_to_alls)
+    remat_policy: str = "nothing"
+    use_kernels: bool = False
+    scan_layers: bool = True
+
+    # ---- derived ----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab_size // VOCAB_PAD) * VOCAB_PAD
+
+    @property
+    def is_local_flags(self) -> tuple[bool, ...]:
+        """Per-(decoder-)layer sliding-window flag."""
+        n = self.num_layers
+        if self.layer_pattern == "local_global":
+            return tuple(i % 2 == 0 for i in range(n))
+        if self.layer_pattern == "sparse_global":
+            # hymba: global attention on first / middle / last layer
+            glob = {0, n // 2, n - 1}
+            return tuple(i not in glob for i in range(n))
+        if self.layer_pattern == "local_only":
+            return tuple(True for _ in range(n))
+        return tuple(False for _ in range(n))
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# parameter schema
+# ---------------------------------------------------------------------------
+
+
+def _block_specs(cfg: ModelConfig, cross: bool = False):
+    s: dict[str, Any] = {"norm_mixer": L.rms_norm_spec(cfg.d_model),
+                         "norm_ffn": L.rms_norm_spec(cfg.d_model)}
+    if cfg.family == "mamba":
+        s["mixer"] = L.mamba_specs(cfg)
+        del s["norm_ffn"]
+        return s
+    if cfg.family == "hybrid":
+        s["mixer"] = L.hymba_specs(cfg)
+    else:
+        s["mixer"] = L.attention_specs(cfg)
+    if cross:
+        s["cross"] = L.attention_specs(cfg, cross=True)
+        s["norm_cross"] = L.rms_norm_spec(cfg.d_model)
+    s["ffn"] = L.moe_specs(cfg) if cfg.moe else L.swiglu_specs(cfg)
+    if cfg.post_norms:
+        s["post_norm_mixer"] = L.rms_norm_spec(cfg.d_model)
+        s["post_norm_ffn"] = L.rms_norm_spec(cfg.d_model)
+    return s
+
+
+def _stack_specs(block, n):
+    return jax.tree.map(
+        lambda sp: spec((n,) + sp.shape, ("layers",) + sp.axes, sp.dtype,
+                        sp.init, sp.scale),
+        block, is_leaf=lambda x: hasattr(x, "axes"))
+
+
+def param_specs(cfg: ModelConfig):
+    specs: dict[str, Any] = {
+        "embed": L.embed_specs(cfg),
+        "final_norm": L.rms_norm_spec(cfg.d_model),
+        "layers": _stack_specs(_block_specs(cfg, cross=cfg.family == "encdec"),
+                               cfg.num_layers),
+    }
+    if cfg.family == "encdec":
+        specs["enc_layers"] = _stack_specs(_block_specs(cfg),
+                                           cfg.num_encoder_layers)
+        specs["enc_final_norm"] = L.rms_norm_spec(cfg.d_model)
+    if cfg.prefix_embed_dim:
+        specs["prefix_proj"] = spec((cfg.prefix_embed_dim, cfg.d_model),
+                                    ("embed", "embed"), cfg.dtype)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = spec((cfg.padded_vocab, cfg.d_model),
+                                ("vocab", "embed"), cfg.dtype, "small_normal")
+    return specs
+
+
+def init(key, cfg: ModelConfig):
+    return init_params(key, param_specs(cfg))
+
+
+def abstract(cfg: ModelConfig):
+    return abstract_params(param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(bp, x, cfg, *, positions, causal, is_local, cache, cache_pos,
+                 enc_out):
+    """One transformer block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = L.rms_norm(bp["norm_mixer"], x, cfg.norm_eps)
+    if cfg.family == "mamba":
+        out, new_cache = L.mamba_mixer(bp["mixer"], h, cfg, cache=cache)
+        return x + out, new_cache, aux
+    if cfg.family == "hybrid":
+        out, new_cache = L.hymba_mixer(bp["mixer"], h, cfg,
+                                       positions=positions,
+                                       is_local=is_local, cache=cache,
+                                       cache_pos=cache_pos)
+    else:
+        out, new_cache = L.attention(bp["mixer"], h, cfg, positions=positions,
+                                     causal=causal, is_local=is_local,
+                                     cache=cache, cache_pos=cache_pos)
+    if cfg.post_norms:
+        out = L.rms_norm(bp["post_norm_mixer"], out, cfg.norm_eps)
+    x = x + out
+    if enc_out is not None and "cross" in bp:
+        h = L.rms_norm(bp["norm_cross"], x, cfg.norm_eps)
+        out, _ = L.attention(bp["cross"], h, cfg, positions=positions,
+                             causal=False, kv_x=enc_out)
+        x = x + out
+    h = L.rms_norm(bp["norm_ffn"], x, cfg.norm_eps)
+    if cfg.moe:
+        out, aux = L.moe_ffn(bp["ffn"], h, cfg)
+    else:
+        out = L.swiglu(bp["ffn"], h)
+    if cfg.post_norms:
+        out = L.rms_norm(bp["post_norm_ffn"], out, cfg.norm_eps)
+    return x + out, new_cache, aux
+
+
+def _run_stack(stacked, x, cfg, *, positions, causal, local_flags, caches,
+               cache_pos, enc_out):
+    """lax.scan over stacked layer params (remat-able)."""
+
+    def body(carry, inputs):
+        x, aux = carry
+        bp, is_local, cache = inputs
+        x, new_cache, aux_l = _block_apply(
+            bp, x, cfg, positions=positions, causal=causal,
+            is_local=is_local, cache=cache, cache_pos=cache_pos,
+            enc_out=enc_out)
+        return (x, aux + aux_l), new_cache
+
+    if cfg.remat:
+        if cfg.remat_policy == "save_moe":
+            pol = jax.checkpoint_policies.save_only_these_names("moe_out")
+        elif cfg.remat_policy == "offload_moe":
+            pol = jax.checkpoint_policies.save_and_offload_only_these_names(
+                names_which_can_be_saved=[],
+                names_which_can_be_offloaded=["moe_out"],
+                offload_src="device", offload_dst="pinned_host")
+        else:
+            pol = jax.checkpoint_policies.nothing_saveable
+        body = jax.checkpoint(body, policy=pol)
+
+    flags = jnp.asarray(local_flags, jnp.bool_)
+    if cfg.scan_layers:
+        (x, aux), new_caches = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                            (stacked, flags, caches))
+    else:
+        aux = jnp.float32(0.0)
+        new_caches = []
+        n = flags.shape[0]
+        for i in range(n):
+            bp = jax.tree.map(lambda a: a[i], stacked)
+            cache = jax.tree.map(lambda a: a[i], caches) if caches is not None else None
+            (x, aux), nc = body((x, aux), (bp, flags[i], cache))
+            new_caches.append(nc)
+        if new_caches and new_caches[0] is not None:
+            new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        else:
+            new_caches = None
+    return x, aux, new_caches
+
+
+def _inputs_to_embeds(params, batch, cfg):
+    """tokens (+ optional modality prefix embeddings) -> (x, positions)."""
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+    if cfg.prefix_embed_dim and "prefix_embeds" in batch:
+        pre = batch["prefix_embeds"].astype(cfg.dtype) @ params["prefix_proj"]
+        x = jnp.concatenate([pre, x], axis=1)
+    b, l, _ = x.shape
+    positions = jnp.arange(l, dtype=jnp.int32)[None, :].repeat(b, 0)
+    return x, positions
+
+
+def encode(params, batch, cfg: ModelConfig):
+    """Encoder stack (encdec family). batch['enc_embeds']: (B, Ls, D_in)
+    — the stubbed modality frontend output (precomputed frames)."""
+    enc_in = batch["enc_embeds"].astype(cfg.dtype)
+    if cfg.prefix_embed_dim:
+        enc_in = enc_in @ params["prefix_proj"]
+    b, ls, _ = enc_in.shape
+    positions = jnp.arange(ls, dtype=jnp.int32)[None, :].repeat(b, 0)
+    x, _, _ = _run_stack(params["enc_layers"], enc_in, cfg,
+                         positions=positions, causal=False,
+                         local_flags=(False,) * cfg.num_encoder_layers,
+                         caches=None, cache_pos=None, enc_out=None)
+    return L.rms_norm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Full-sequence forward -> (logits, aux_loss). Training path."""
+    enc_out = encode(params, batch, cfg) if cfg.family == "encdec" else None
+    x, positions = _inputs_to_embeds(params, batch, cfg)
+    x, aux, _ = _run_stack(params["layers"], x, cfg, positions=positions,
+                           causal=True, local_flags=cfg.is_local_flags,
+                           caches=None, cache_pos=None, enc_out=enc_out)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"]["embedding"])
+    logits = L.unembed({"embedding": head}, x, cfg)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Stacked per-layer cache pytree (scanned axis leading)."""
+    n, hkv, dh = cfg.num_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def kv():
+        return L.KVCache(
+            k=jnp.zeros((n, batch, hkv, max_seq, dh), cfg.dtype),
+            v=jnp.zeros((n, batch, hkv, max_seq, dh), cfg.dtype))
+
+    def ssm():
+        d_inner, h, conv_dim = L._mamba_dims(cfg)
+        return L.SSMCache(
+            conv=jnp.zeros((n, batch, cfg.ssm_conv - 1, conv_dim), cfg.dtype),
+            state=jnp.zeros((n, batch, h, cfg.ssm_state, cfg.ssm_head_dim),
+                            jnp.float32))
+
+    if cfg.family == "mamba":
+        return ssm()
+    if cfg.family == "hybrid":
+        return (kv(), ssm())
+    return kv()
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes of the cache pytree (mirrors init_cache)."""
+    kv_ax = L.KVCache(k=("layers", "batch", "kv_heads", "kv_seq", "head_dim"),
+                      v=("layers", "batch", "kv_heads", "kv_seq", "head_dim"))
+    ssm_ax = L.SSMCache(conv=("layers", "batch", "conv", "mlp"),
+                        state=("layers", "batch", "ssm_heads", "ssm_state",
+                               None))
+    if cfg.family == "mamba":
+        return ssm_ax
+    if cfg.family == "hybrid":
+        return (kv_ax, ssm_ax)
+    return kv_ax
+
+
+def prefill(params, batch, cfg: ModelConfig, cache):
+    """Process the prompt, filling the cache. Returns (last_logits,
+    cache). For mamba/hybrid the SSM state is advanced by scanning —
+    decode-shaped dry-runs exercise decode_step instead."""
+    enc_out = encode(params, batch, cfg) if cfg.family == "encdec" else None
+    x, positions = _inputs_to_embeds(params, batch, cfg)
+    x, _, new_caches = _run_stack(
+        params["layers"], x, cfg, positions=positions, causal=True,
+        local_flags=cfg.is_local_flags, caches=cache, cache_pos=0,
+        enc_out=enc_out)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"]["embedding"])
+    logits = L.unembed({"embedding": head}, x[:, -1:], cfg)
+    return logits, new_caches
+
+
+def decode_step(params, tokens, pos, cfg: ModelConfig, cache, enc_out=None):
+    """One decode step. tokens: (B, 1); pos: scalar position. Returns
+    (logits (B,1,V), new_cache)."""
+    x = L.embed(params["embed"], tokens, cfg)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    x, _, new_caches = _run_stack(
+        params["layers"], x, cfg, positions=positions, causal=True,
+        local_flags=cfg.is_local_flags, caches=cache, cache_pos=pos,
+        enc_out=enc_out)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"]["embedding"])
+    logits = L.unembed({"embedding": head}, x, cfg)
+    return logits, new_caches

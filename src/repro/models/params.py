@@ -1,0 +1,72 @@
+"""Parameter schema: shape + dtype + logical sharding axes + init.
+
+Models declare a pytree of :class:`ParamSpec`; from it we derive
+  - ``init_params``: materialized arrays (smoke tests / real training),
+  - ``abstract_params``: ShapeDtypeStructs (the dry-run path — no
+    allocation ever happens for the full-size configs),
+  - sharding via ``repro.runtime.sharding.tree_shardings``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: jnp.dtype = jnp.float32
+    init: str = "normal"        # normal | zeros | ones | small_normal
+    scale: float | None = None  # overrides the fan-in scale
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape: Sequence[int], axes: Sequence[str | None], dtype=jnp.float32,
+         init: str = "normal", scale: float | None = None) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), jnp.dtype(dtype), init, scale)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract_params(spec_tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def init_params(key, spec_tree):
+    flat, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(flat))
+    out = []
+    for k, s in zip(keys, flat):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, s.dtype))
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            scale = s.scale if s.scale is not None else fan_in ** -0.5
+            if s.init == "small_normal":
+                scale = s.scale if s.scale is not None else 0.02
+            out.append((jax.random.normal(k, s.shape, jnp.float32)
+                        * scale).astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(spec_tree) -> int:
+    flat = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    total = 0
+    for s in flat:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total

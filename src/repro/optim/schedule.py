@@ -1,0 +1,23 @@
+"""LR schedules (cosine with linear warmup, constant, rsqrt)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps)
+                    / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def rsqrt(step, *, warmup_steps: int):
+    step = jnp.maximum(step.astype(jnp.float32), 1.0)
+    return jnp.minimum(step / warmup_steps, jnp.sqrt(warmup_steps / step))
+
+
+def constant(step, **_):
+    return jnp.ones_like(step, jnp.float32)

@@ -1,0 +1,53 @@
+"""Ambient mesh context for layers that build shard_map regions.
+
+Pure-functional model code cannot take a Mesh argument everywhere, so
+drivers (train / dryrun / serve) activate the mesh around tracing:
+
+    with runtime_context.use_mesh(mesh):
+        jitted.lower(...)
+
+``layers.moe_ffn`` switches to the expert-parallel shard_map path when
+a context is active; without one it uses the single-program dispatch
+(single-device tests, smoke configs).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from contextvars import ContextVar
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: jax.sharding.Mesh
+    dp_axes: tuple[str, ...]      # batch-parallel axes ("pod","data")
+    ep_axis: str                  # expert-parallel axis ("data")
+    tp_axis: str | None           # tensor-parallel axis ("model")
+
+    @property
+    def all_axes(self) -> tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+
+_CTX: ContextVar[MeshCtx | None] = ContextVar("repro_mesh_ctx", default=None)
+
+
+def current() -> MeshCtx | None:
+    return _CTX.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, dp_axes=None, ep_axis="data", tp_axis="model"):
+    names = tuple(mesh.axis_names)
+    if dp_axes is None:
+        dp_axes = tuple(a for a in ("pod", "data") if a in names)
+    tp = tp_axis if tp_axis in names else None
+    ep = ep_axis if ep_axis in names else names[-1]
+    tok = _CTX.set(MeshCtx(mesh=mesh, dp_axes=tuple(dp_axes), ep_axis=ep,
+                           tp_axis=tp))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)

@@ -1,0 +1,3 @@
+from repro.train import steps
+
+__all__ = ["steps"]

@@ -1,0 +1,96 @@
+"""Training / serving step functions (the units the dry-run lowers).
+
+``train_step`` is the full production step: forward (remat'd scanned
+layers), next-token cross-entropy with z-loss and MoE aux loss,
+backward, grad clip, AdamW (optionally ZeRO-sharded / int8 states).
+Gradient accumulation over microbatches happens via an inner scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import adamw, schedule as sched
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    schedule: str = "cosine"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    z_loss: float = 1e-4
+    microbatches: int = 1  # gradient accumulation factor
+
+
+def next_token_loss(logits, labels, cfg: M.ModelConfig, z_weight=1e-4):
+    """Shifted cross-entropy. labels: (B, L_total) aligned with logits;
+    positions with label < 0 are masked (prefix/padding)."""
+    logits = logits[:, :-1]
+    targets = labels[:, 1:]
+    mask = targets >= 0
+    tclip = jnp.clip(targets, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, tclip[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    z = jnp.square(lse) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / denom + z_weight * z.sum() / denom
+
+
+def loss_fn(params, batch, cfg: M.ModelConfig, tcfg: TrainConfig):
+    logits, aux = M.forward(params, batch, cfg)
+    labels = batch["labels"]
+    loss = next_token_loss(logits, labels, cfg, tcfg.z_loss)
+    if cfg.moe:
+        loss = loss + cfg.aux_loss_weight * aux
+    return loss, {"aux_loss": aux}
+
+
+def _split_microbatches(batch, n):
+    return jax.tree.map(lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                        batch)
+
+
+def train_step(params, opt_state, batch, cfg: M.ModelConfig,
+               tcfg: TrainConfig):
+    """One optimizer step (with grad accumulation when microbatches>1)."""
+
+    if tcfg.microbatches > 1:
+        micro = _split_microbatches(batch, tcfg.microbatches)
+
+        def acc(carry, mb):
+            g_acc, l_acc = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb, cfg, tcfg)
+            return (jax.tree.map(jnp.add, g_acc, grads), l_acc + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(acc, (zeros, jnp.float32(0)), micro)
+        grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+        loss = loss / tcfg.microbatches
+        extras = {}
+    else:
+        (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg, tcfg)
+
+    lr_scale = {
+        "cosine": sched.cosine_warmup,
+        "rsqrt": sched.rsqrt,
+        "constant": sched.constant,
+    }[tcfg.schedule](opt_state["step"] + 1,  # step counter is 0-based
+                     warmup_steps=tcfg.warmup_steps,
+                     total_steps=tcfg.total_steps)
+    params, opt_state, om = adamw.update(grads, opt_state, params,
+                                         tcfg.optimizer, lr_scale)
+    metrics = {"loss": loss, **om, **extras}
+    return params, opt_state, metrics
+
+
+def eval_step(params, batch, cfg: M.ModelConfig, tcfg: TrainConfig):
+    loss, extras = loss_fn(params, batch, cfg, tcfg)
+    return {"loss": loss, **extras}

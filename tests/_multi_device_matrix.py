@@ -1,0 +1,80 @@
+"""Subprocess body for multi-PE list-ranking tests (8 virtual devices).
+
+Run as: python tests/_multi_device_matrix.py — exits nonzero on any
+mismatch against the sequential oracle. Must set XLA_FLAGS before jax.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.core.listrank import (IndirectionSpec, ListRankConfig,  # noqa
+                                 instances, rank_list_seq,
+                                 rank_list_with_stats)
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("row", "col"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    base = ListRankConfig(srs_rounds=1, local_contraction=False)
+    grid = IndirectionSpec.grid(("row", "col"))
+    topo = IndirectionSpec.topology(("col",), ("row",))
+    n = 1024
+    sg1, rg1 = instances.gen_list(n, gamma=1.0, seed=1)
+    sg0, rg0 = instances.gen_list(n, gamma=0.0, seed=2)
+    sml, rml = instances.gen_random_lists(n, num_lists=11, seed=4,
+                                          weighted=True)
+    se, re_, _ = instances.gen_euler_tour(n // 2 + 1, seed=6, locality=True)
+    se, re_ = instances.pad_to_multiple(se, re_, 8)
+
+    cases = [
+        ("srs1 direct", sg1, rg1, base, None),
+        ("srs2 contract", sg1, rg1,
+         base.with_(srs_rounds=2, local_contraction=True), None),
+        ("srs1 grid", sg1, rg1, base, grid),
+        ("srs1 topo", sg1, rg1, base, topo),
+        ("srs2 grid contract", sg0, rg0,
+         base.with_(srs_rounds=2, local_contraction=True), grid),
+        ("reversal", sg1, rg1, base.with_(avoid_reversal=False), None),
+        ("doubling grid", sg1, rg1, base.with_(algorithm="doubling"), grid),
+        ("weighted multilist", sml, rml,
+         base.with_(srs_rounds=2, local_contraction=True), None),
+        ("euler contract", se, re_, base.with_(local_contraction=True), None),
+        ("pallas contract", sg1, rg1,
+         base.with_(local_contraction=True, use_pallas=True), None),
+    ]
+    failures = 0
+    for name, succ, rank, cfg, ind in cases:
+        s_ref, r_ref = rank_list_seq(succ, rank)
+        s, r, stats = rank_list_with_stats(succ, rank, mesh, cfg=cfg,
+                                           indirection=ind)
+        ok = (np.array_equal(np.asarray(s), s_ref)
+              and np.array_equal(np.asarray(r), r_ref))
+        print(("OK  " if ok else "FAIL") + f" {name} "
+              f"rounds={stats['rounds'] // 8} msgs={stats['chase_msgs']}")
+        failures += 0 if ok else 1
+
+    # paper-theory checks (§2.2): rounds ~ n/r + 1; |sub| ~ r ln(n/r)
+    cfg = base.with_(ruler_fraction=1 / 32)
+    _, _, stats = rank_list_with_stats(sg1, rg1, mesh, cfg=cfg)
+    rounds = stats["rounds"] // 8
+    r_tot = 8 * max(4, int(n / 8 / 32))
+    expect = n / r_tot + 1
+    if not rounds <= 4 * expect:
+        print(f"FAIL round bound: {rounds} vs expected ~{expect}")
+        failures += 1
+    import math
+    sub_expect = r_tot * math.log(n / r_tot)
+    if not stats["sub_size"] <= 3 * sub_expect + 64:
+        print(f"FAIL sub size: {stats['sub_size']} vs ~{sub_expect}")
+        failures += 1
+    print("failures:", failures)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

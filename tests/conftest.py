@@ -1,0 +1,24 @@
+import os
+import sys
+
+# tests run on the single real CPU device (the 512-device override is
+# exclusively the dry-run's); multi-device list-ranking tests spawn
+# subprocesses that set XLA_FLAGS before importing jax.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """XLA:CPU accumulates JIT-compiled executables across this large
+    suite (hundreds of distinct programs incl. hypothesis variants);
+    without eviction the CPU JIT eventually aborts. Dropping caches at
+    module boundaries keeps the long single-process run healthy."""
+    yield
+    jax.clear_caches()

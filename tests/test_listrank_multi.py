@@ -1,0 +1,19 @@
+"""Multi-PE (8 virtual devices) list ranking: correctness across
+indirection schemes + the paper's round/subproblem predictions.
+Runs in a subprocess because the device count must be fixed before jax
+initializes (the main test process keeps the single real device)."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_multi_device_matrix():
+    script = pathlib.Path(__file__).parent / "_multi_device_matrix.py"
+    proc = subprocess.run([sys.executable, str(script)],
+                          capture_output=True, text=True, timeout=2400)
+    print(proc.stdout)
+    print(proc.stderr[-2000:] if proc.stderr else "")
+    assert proc.returncode == 0, "multi-device matrix failed"

@@ -1,0 +1,114 @@
+"""Per-arch smoke tests (assignment requirement): instantiate the
+reduced config of each family, run one forward + one train step on CPU,
+assert output shapes and no NaNs; plus decode-vs-forward consistency."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train import steps as train_steps
+
+RNG = np.random.default_rng(0)
+
+
+def _batch(cfg, b=2, l=32, labels=True):
+    out = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (b, l)),
+                                 jnp.int32)}
+    total = l
+    if cfg.family == "encdec":
+        out["enc_embeds"] = jnp.asarray(
+            RNG.normal(size=(b, l, cfg.prefix_embed_dim)), jnp.float32)
+    elif cfg.prefix_embed_dim:
+        npatch = 8
+        out["prefix_embeds"] = jnp.asarray(
+            RNG.normal(size=(b, npatch, cfg.prefix_embed_dim)), jnp.float32)
+        total = l + npatch
+    if labels:
+        out["labels"] = jnp.asarray(
+            RNG.integers(0, cfg.vocab_size, (b, total)), jnp.int32)
+    return out, total
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_arch_forward_and_train_step(arch):
+    cfg = configs.get_config(arch, smoke=True)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    batch, total = _batch(cfg)
+    logits, aux = jax.jit(lambda p, b: M.forward(p, b, cfg))(params, batch)
+    assert logits.shape == (2, total, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), "NaN/inf in logits"
+
+    tcfg = train_steps.TrainConfig(optimizer=adamw.AdamWConfig(lr=1e-3),
+                                   warmup_steps=1, total_steps=10)
+    opt = adamw.init(params, tcfg.optimizer)
+    step = jax.jit(functools.partial(train_steps.train_step, cfg=cfg,
+                                     tcfg=tcfg))
+    params2, opt2, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"])), "NaN loss"
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # parameters actually moved
+    moved = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "hymba-1.5b", "mamba2-130m",
+                                  "granite-moe-1b-a400m"])
+def test_arch_decode_consistency(arch):
+    """Incremental decode must reproduce the full forward pass."""
+    cfg = configs.get_config(arch, smoke=True)
+    if cfg.moe:
+        cfg = cfg.with_(capacity_factor=8.0)  # no drops for determinism
+    params = M.init(jax.random.PRNGKey(1), cfg)
+    b, seq = 2, 16
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (b, seq)), jnp.int32)
+    full, _ = M.forward(params, {"tokens": toks}, cfg)
+    half = seq // 2
+    cache = M.init_cache(cfg, b, seq)
+    lg, cache = M.prefill(params, {"tokens": toks[:, :half]}, cfg, cache)
+    np.testing.assert_allclose(np.asarray(lg[:, -1]),
+                               np.asarray(full[:, half - 1]), atol=2e-3)
+    for t in range(half, seq):
+        lg, cache = M.decode_step(params, toks[:, t:t + 1], t, cfg, cache)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, t]), atol=2e-3)
+
+
+def test_grad_accumulation_equivalence():
+    """microbatches=2 must match a single big batch (mean loss grads)."""
+    cfg = configs.get_config("tinyllama-1.1b", smoke=True)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    tcfg1 = train_steps.TrainConfig(optimizer=adamw.AdamWConfig(lr=1e-3),
+                                    warmup_steps=1, total_steps=10,
+                                    microbatches=1)
+    tcfg2 = train_steps.TrainConfig(optimizer=adamw.AdamWConfig(lr=1e-3),
+                                    warmup_steps=1, total_steps=10,
+                                    microbatches=2)
+    batch, _ = _batch(cfg, b=4, l=16)
+    opt = adamw.init(params, tcfg1.optimizer)
+    p1, _, m1 = train_steps.train_step(params, opt, batch, cfg, tcfg1)
+    p2, _, m2 = train_steps.train_step(params, opt, batch, cfg, tcfg2)
+    # losses are per-token means over different denominators; compare
+    # the resulting parameters loosely (same direction, similar size)
+    d1 = jnp.concatenate([(a - b).ravel() for a, b in
+                          zip(jax.tree.leaves(p1), jax.tree.leaves(params))])
+    d2 = jnp.concatenate([(a - b).ravel() for a, b in
+                          zip(jax.tree.leaves(p2), jax.tree.leaves(params))])
+    cos = jnp.vdot(d1, d2) / (jnp.linalg.norm(d1) * jnp.linalg.norm(d2))
+    assert float(cos) > 0.9
+
+
+def test_use_kernels_matches_ref_path():
+    cfg = configs.get_config("gemma2-2b", smoke=True)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    batch, _ = _batch(cfg, labels=False)
+    l1, _ = M.forward(params, batch, cfg.with_(use_kernels=False))
+    l2, _ = M.forward(params, batch, cfg.with_(use_kernels=True))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-3,
+                               rtol=1e-3)
