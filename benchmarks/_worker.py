@@ -23,14 +23,14 @@ import time  # noqa: E402
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core.listrank import (IndirectionSpec, ListRankConfig,  # noqa
                                  instances, rank_list_with_stats)
 
 
 def main():
     rows, cols = spec.get("mesh") or (1, spec["p"])
-    mesh = jax.make_mesh((rows, cols), ("row", "col"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((rows, cols), ("row", "col"))
     n = spec["n_per_pe"] * spec["p"]
     inst = spec.get("instance", "list")
     if inst == "list":

@@ -31,6 +31,7 @@ RESULTS = HERE / "results"
 sys.path.insert(0, str(HERE.parent / "src"))
 
 from repro.core.listrank import analysis  # noqa: E402
+from repro.core.listrank.api import CHASE_WIRE_WORDS  # noqa: E402
 
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
 P_BENCH = 8 if QUICK else 16
@@ -49,12 +50,13 @@ def _run_worker(spec: dict) -> dict:
 
 
 def _modeled_seconds(stats: dict, p: int, hops: int) -> float:
-    """alpha-beta time from counted messages (3 words each) and rounds."""
+    """alpha-beta time from counted messages (wire-format words each)
+    and rounds."""
     m = analysis.SUPERMUC
     rounds = max(stats.get("rounds", 0) // p, 1)
     msgs = stats.get("chase_msgs", 0) + stats.get("pd_msgs", 0) \
         + stats.get("fixup_msgs", 0) + stats.get("reversal_msgs", 0)
-    words_per_pe = 3.0 * msgs / p
+    words_per_pe = float(CHASE_WIRE_WORDS) * msgs / p
     startups = rounds * hops * (p ** (1.0 / max(hops, 1)))
     return m.alpha * startups + m.beta * words_per_pe
 
@@ -127,6 +129,22 @@ def fig4_indirection() -> list[dict]:
     return rows
 
 
+def exchange_micro() -> list[dict]:
+    """Exchange-layer microbenchmark (packed vs unpacked wire): runs in
+    a subprocess (fixed virtual-device count), re-emits its CSV rows."""
+    proc = subprocess.run([sys.executable, str(HERE / "exchange_bench.py")],
+                          capture_output=True, text=True, timeout=3600)
+    for line in proc.stdout.splitlines():
+        if line.startswith("exchange/"):
+            print(line)
+    if proc.returncode != 0:
+        print(f"exchange/error,0,rc={proc.returncode}")
+        print(proc.stderr[-1000:])
+        return []
+    f = RESULTS / "exchange.json"
+    return json.loads(f.read_text()) if f.exists() else []
+
+
 def roofline() -> list[dict]:
     """Aggregate the dry-run JSON artifacts into the roofline table."""
     rows = []
@@ -152,6 +170,7 @@ def main() -> None:
     RESULTS.mkdir(exist_ok=True)
     out = {}
     print("name,us_per_call,derived")
+    out["exchange"] = exchange_micro()
     out["fig2_locality"] = fig2_locality()
     out["fig3_scaling"] = fig3_scaling()
     out["fig4_indirection"] = fig4_indirection()

@@ -19,14 +19,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
+from repro import compat
 from repro.core.listrank import (ListRankConfig, instances,
                                  rank_list_with_stats)
 
 
 def main():
     p = len(jax.devices())
-    mesh = jax.make_mesh((p,), ("pe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((p,), ("pe",))
     n_nodes = 4097
     succ, rank, arcs = instances.gen_euler_tour(n_nodes, seed=3,
                                                 locality=True)

@@ -20,6 +20,7 @@ import math
 import jax
 import numpy as np
 
+from repro import compat
 from repro.core.listrank import (IndirectionSpec, ListRankConfig, analysis,
                                  instances, rank_list_seq,
                                  rank_list_with_stats)
@@ -27,8 +28,7 @@ from repro.core.listrank import (IndirectionSpec, ListRankConfig, analysis,
 
 def main():
     p = len(jax.devices())
-    mesh = jax.make_mesh((2, p // 2), ("row", "col"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, p // 2), ("row", "col"))
     n = 1 << 16
     print(f"ranking a {n}-element random list on {p} PEs "
           f"(grid indirection {2}x{p // 2})")

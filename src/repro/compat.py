@@ -1,0 +1,62 @@
+"""Version-adaptive JAX API shims.
+
+The repo targets the modern public API (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``); this container ships an older
+jaxlib where those live under ``jax.experimental.shard_map`` /
+lack the ``axis_types`` parameter. Everything version-sensitive goes
+through here so the rest of the codebase is written once.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+
+
+def shard_map(fn, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` when available, else the experimental one.
+
+    ``check_vma=False`` maps to ``check_rep=False`` on old versions —
+    both disable the replication/varying-manual-axes check that the
+    per-PE collectives here do not satisfy mechanically.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str]) -> Any:
+    """``jax.make_mesh`` with Auto axis types when supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axis_names),
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(tuple(shape), tuple(axis_names))
+
+
+def tree_flatten_with_path(tree, is_leaf=None):
+    """``jax.tree.flatten_with_path`` across its move out of tree_util."""
+    fn = getattr(jax.tree, "flatten_with_path", None)
+    if fn is not None:
+        return fn(tree, is_leaf=is_leaf)
+    return jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas TPU compiler params across the TPUCompilerParams rename."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
+def abstract_mesh(shape: Sequence[int], axis_names: Sequence[str]) -> Any:
+    """Device-free ``AbstractMesh`` across the signature change (old
+    versions take a tuple of (name, size) pairs)."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, shape)))

@@ -27,16 +27,30 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.listrank import local as local_lib
 from repro.core.listrank import store as store_lib
 from repro.core.listrank.config import IndirectionSpec, ListRankConfig
 from repro.core.listrank.doubling import doubling_solve
-from repro.core.listrank.exchange import MeshPlan, route
+from repro.core.listrank import exchange as exchange_lib
+from repro.core.listrank.exchange import MeshPlan
 from repro.core.listrank.srs import (LevelSpec, gather_until_done,
                                      route_until_done, solve_store,
                                      zero_stats, _merge)
 
 FATAL_KEYS = ("dropped", "sub_overflow", "store_miss", "undelivered")
+
+
+#: structure of a chase wave message. Width is what matters here —
+#: every leaf is one 32-bit word on the wire regardless of its runtime
+#: dtype (weight may be int32 or float32; both bit-pack to one word).
+CHASE_LEAVES = {"target": jnp.int32, "ruler": jnp.int32, "weight": jnp.float32}
+
+#: int32 words per chase message on the wire (payload leaves + routing
+#: destination + validity) — the WireFormat descriptor derived
+#: host-side; the benchmark harness uses it for modeled comm volume.
+CHASE_WIRE_WORDS = exchange_lib.WireFormat.for_leaves(
+    {**CHASE_LEAVES, "_dest": jnp.int32}).width
 
 
 def build_specs(cfg: ListRankConfig, plan: MeshPlan, m: int, n: int,
@@ -249,7 +263,7 @@ def _jitted_solver(mesh, plan, cfg, specs, m):
     fn = functools.partial(_solve_sharded, plan=plan, cfg=cfg, specs=specs,
                            m=m)
     spec_sharded = P(plan.pe_axes)
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         fn, mesh=mesh,
         in_specs=(spec_sharded, spec_sharded, P()),
         out_specs=(spec_sharded, spec_sharded, P()),
@@ -269,7 +283,9 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
     """
     cfg = cfg or ListRankConfig()
     pe_axes = tuple(pe_axes) if pe_axes is not None else tuple(mesh.axis_names)
-    plan = MeshPlan.from_mesh(mesh, pe_axes, indirection)
+    plan = MeshPlan.from_mesh(mesh, pe_axes, indirection,
+                              wire_packing=cfg.wire_packing,
+                              pallas_pack=cfg.use_pallas_pack)
     p = plan.p
     n = succ.shape[0]
     if n % p != 0:

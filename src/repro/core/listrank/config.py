@@ -92,5 +92,15 @@ class ListRankConfig:
     #: use the Pallas local_chase kernel for local contraction.
     use_pallas: bool = False
 
+    #: pack all payload leaves of a message batch into one (Q, W) int32
+    #: wire matrix so every routing hop is exactly one ``all_to_all``
+    #: (see DESIGN.md). Off => legacy one-collective-per-leaf exchange;
+    #: both paths are bit-identical.
+    wire_packing: bool = True
+    #: route the wire pack + bucket scatter through the Pallas
+    #: ``mailbox_pack`` kernel (XLA fallback when the working set
+    #: exceeds VMEM).
+    use_pallas_pack: bool = False
+
     def with_(self, **kw) -> "ListRankConfig":
         return dataclasses.replace(self, **kw)

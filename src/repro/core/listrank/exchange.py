@@ -15,7 +15,22 @@ because every hop fixes its own coordinate, so partially-routed messages
 simply self-send on already-fixed hops). Capacity overflow therefore
 costs rounds, never correctness; the amount is tracked in ``stats``.
 
-All functions here run *inside* ``jax.shard_map`` — per-PE arrays,
+Packed wire format (see DESIGN.md): with ``MeshPlan.wire_packing`` all
+payload leaves of a message batch are bit-packed into a single
+``(Q, W)`` int32 matrix — the layout is a static :class:`WireFormat`
+derived from the payload pytree at trace time — so each hop costs
+exactly **one** ``all_to_all`` regardless of leaf count. The unpacked
+path (one collective per leaf plus one for validity) is kept behind the
+same API for A/B testing; both paths share every index computation, so
+they are bit-identical.
+
+Sorting discipline: the only O(Q log Q) sort in the routing hot path is
+the per-hop bucket sort (:func:`sort_and_group`, shared with request
+deduplication in :func:`remote_gather`). Queue compaction is sort-free
+(stream compaction by prefix sum), and :func:`route_compact` fuses it
+into the bucket sort — leftovers come out compacted for free.
+
+All functions here run *inside* ``shard_map`` — per-PE arrays,
 collectives by axis name.
 """
 from __future__ import annotations
@@ -25,11 +40,17 @@ from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.listrank.config import IndirectionSpec
 
 Pytree = Any
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+#: payload keys reserved for the router itself.
+RESERVED_KEYS = ("_dest", "_src")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,11 +59,17 @@ class MeshPlan:
 
     PE ids are flattened row-major over ``pe_axes`` (matching
     ``lax.axis_index(pe_axes)``).
+
+    ``wire_packing`` selects the packed wire format (one collective per
+    hop); ``pallas_pack`` additionally routes the pack+bucket-scatter
+    through the ``repro.kernels.mailbox_pack`` Pallas kernel.
     """
 
     pe_axes: tuple[str, ...]
     axis_sizes: tuple[int, ...]
     indirection: IndirectionSpec
+    wire_packing: bool = True
+    pallas_pack: bool = False
 
     @property
     def p(self) -> int:
@@ -76,9 +103,30 @@ class MeshPlan:
             coord = coord * self.axis_sizes[i] + c
         return coord
 
+    def hop_coord_to_pe(self, hop: tuple[str, ...]) -> np.ndarray:
+        """Inverse of :meth:`hop_coord` restricted to the group: the
+        contribution of group coordinate ``b`` to the flat PE id (the
+        remaining axes contribute the *receiver's own* coordinates).
+        Static (numpy) — used to rebuild sender ids from receive-buffer
+        row indices."""
+        s = self.hop_size(hop)
+        b = np.arange(s, dtype=np.int32)
+        rem, acc = b, np.zeros(s, np.int32)
+        for a in reversed(hop):
+            i = self.pe_axes.index(a)
+            stride = 1
+            for sz in self.axis_sizes[i + 1:]:
+                stride *= sz
+            c = rem % self.axis_sizes[i]
+            rem = rem // self.axis_sizes[i]
+            acc = acc + c.astype(np.int32) * stride
+        return acc
+
     @staticmethod
-    def from_mesh(mesh: jax.sharding.Mesh, pe_axes: Sequence[str],
-                  indirection: IndirectionSpec | None = None) -> "MeshPlan":
+    def from_mesh(mesh, pe_axes: Sequence[str],
+                  indirection: IndirectionSpec | None = None,
+                  wire_packing: bool = True,
+                  pallas_pack: bool = False) -> "MeshPlan":
         pe_axes = tuple(pe_axes)
         sizes = tuple(mesh.shape[a] for a in pe_axes)
         if indirection is None:
@@ -87,44 +135,302 @@ class MeshPlan:
             for a in hop:
                 if a not in pe_axes:
                     raise ValueError(f"hop axis {a} not in pe_axes {pe_axes}")
-        return MeshPlan(pe_axes=pe_axes, axis_sizes=sizes, indirection=indirection)
+        return MeshPlan(pe_axes=pe_axes, axis_sizes=sizes,
+                        indirection=indirection, wire_packing=wire_packing,
+                        pallas_pack=pallas_pack)
 
 
-def _bucket(payload: dict[str, jax.Array], coord: jax.Array, valid: jax.Array,
-            n_buckets: int, cap: int):
-    """Scatter messages into per-destination-coordinate mailboxes.
+# --------------------------------------------------------------------------
+# wire format
+# --------------------------------------------------------------------------
 
-    Returns (buffers, buf_valid, leftover_mask). ``buffers[k]`` has shape
-    (n_buckets, cap) + leaf shape; row b holds the first ``cap`` valid
-    messages whose coord == b. Messages beyond capacity keep their slot
-    in the input (leftover_mask True).
+def to_wire_word(x: jax.Array) -> jax.Array:
+    """Reinterpret a 32-bit-or-narrower leaf as int32 words, exactly."""
+    dt = x.dtype
+    if dt == jnp.int32:
+        return x
+    if dt in (jnp.float32, jnp.uint32):
+        return lax.bitcast_convert_type(x, jnp.int32)
+    if dt == jnp.bool_:
+        return x.astype(jnp.int32)
+    if jnp.issubdtype(dt, jnp.integer) and jnp.dtype(dt).itemsize < 4:
+        return x.astype(jnp.int32)
+    raise TypeError(f"wire format does not support dtype {dt}")
+
+
+def from_wire_word(w: jax.Array, dtype) -> jax.Array:
+    """Inverse of :func:`to_wire_word`."""
+    dt = jnp.dtype(dtype)
+    if dt == jnp.int32:
+        return w
+    if dt in (jnp.float32, jnp.uint32):
+        return lax.bitcast_convert_type(w, dt)
+    if dt == jnp.bool_:
+        return w != 0
+    return w.astype(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """Static descriptor of the packed on-wire layout of a message batch.
+
+    Each payload leaf of shape ``(Q, *trail)`` occupies
+    ``prod(trail)`` int32 words per message; the final word is the
+    validity flag. Leaves are laid out in sorted-key order so the format
+    depends only on the payload *structure* — it is derived host-side
+    (at trace time, and for capacity budgeting in ``build_specs``).
     """
-    q = coord.shape[0]
-    key = jnp.where(valid, coord, n_buckets)
-    order = jnp.argsort(key, stable=True)
-    skey = key[order]
-    # start offset of each bucket in the sorted order
-    starts = jnp.searchsorted(skey, jnp.arange(n_buckets + 1, dtype=skey.dtype))
-    pos = jnp.arange(q, dtype=jnp.int32) - starts[jnp.minimum(skey, n_buckets)].astype(jnp.int32)
-    fits = (skey < n_buckets) & (pos < cap)
+
+    keys: tuple[str, ...]
+    dtypes: tuple[str, ...]
+    trails: tuple[tuple[int, ...], ...]
+
+    @classmethod
+    def from_payload(cls, payload: dict[str, jax.Array]) -> "WireFormat":
+        keys = tuple(sorted(payload.keys()))
+        dtypes, trails = [], []
+        for k in keys:
+            v = payload[k]
+            dtypes.append(jnp.dtype(v.dtype).name)
+            trails.append(tuple(int(d) for d in v.shape[1:]))
+        return cls(keys=keys, dtypes=tuple(dtypes), trails=tuple(trails))
+
+    @classmethod
+    def for_leaves(cls, leaves: dict[str, Any]) -> "WireFormat":
+        """Host-side construction from {name: dtype} scalar leaves."""
+        keys = tuple(sorted(leaves.keys()))
+        return cls(keys=keys,
+                   dtypes=tuple(jnp.dtype(leaves[k]).name for k in keys),
+                   trails=((),) * len(keys))
+
+    def leaf_words(self, i: int) -> int:
+        out = 1
+        for d in self.trails[i]:
+            out *= d
+        return out
+
+    @property
+    def width(self) -> int:
+        """Total int32 words per message, incl. the validity word."""
+        return sum(self.leaf_words(i) for i in range(len(self.keys))) + 1
+
+    def columns(self, payload: dict[str, jax.Array],
+                valid: jax.Array) -> list[jax.Array]:
+        """The ``width`` int32 columns of the wire matrix, unstacked."""
+        q = valid.shape[0]
+        cols: list[jax.Array] = []
+        for i, k in enumerate(self.keys):
+            w = to_wire_word(payload[k]).reshape(q, -1)
+            cols.extend(w[:, j] for j in range(w.shape[1]))
+        cols.append(valid.astype(jnp.int32))
+        return cols
+
+    def pack(self, payload: dict[str, jax.Array],
+             valid: jax.Array) -> jax.Array:
+        """Bit-pack a message batch into a ``(Q, width)`` int32 matrix."""
+        return jnp.stack(self.columns(payload, valid), axis=1)
+
+    def unpack(self, wire: jax.Array) -> tuple[dict[str, jax.Array], jax.Array]:
+        """Inverse of :meth:`pack` (exact, incl. float bit patterns)."""
+        return self.unpack_cols(wire.T)
+
+    def unpack_cols(self, cols: jax.Array) -> tuple[dict[str, jax.Array],
+                                                    jax.Array]:
+        """Unpack from column-major wire words: ``cols`` is (width, R).
+
+        This is the on-wire layout of the packed exchange — word-planes
+        are contiguous, so packing/unpacking is plane-wise data movement
+        with no transposes.
+        """
+        r = cols.shape[1]
+        payload = {}
+        off = 0
+        for i, k in enumerate(self.keys):
+            w = self.leaf_words(i)
+            leaf = jnp.moveaxis(cols[off:off + w], 0, -1).reshape(
+                (r,) + self.trails[i])
+            payload[k] = from_wire_word(leaf, self.dtypes[i])
+            off += w
+        valid = cols[off] != 0
+        return payload, valid
+
+
+# --------------------------------------------------------------------------
+# shared sort/scatter primitives
+# --------------------------------------------------------------------------
+
+def sort_and_group(key: jax.Array, valid: jax.Array, sentinel):
+    """One stable sort, shared by bucketing and request dedup.
+
+    Invalid rows sort to the back (keyed ``sentinel``, which must
+    compare greater than every valid key). Returns
+
+      order:  (Q,) the sort permutation,
+      skey:   (Q,) keys in sorted order,
+      pos:    (Q,) rank of each sorted row within its run of equal keys,
+      newrun: (Q,) True at the first row of each run.
+    """
+    q = key.shape[0]
+    k = jnp.where(valid, key, sentinel)
+    order = jnp.argsort(k, stable=True)
+    skey = k[order]
+    i = jnp.arange(q, dtype=jnp.int32)
+    newrun = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), skey[1:] != skey[:-1]])
+    run_start = lax.associative_scan(jnp.maximum, jnp.where(newrun, i, 0))
+    return order, skey, i - run_start, newrun
+
+
+def _bucket_indices(coord: jax.Array, valid: jax.Array, n_buckets: int,
+                    cap: int):
+    """Mailbox scatter coordinates for one hop.
+
+    Returns (order, row, col, fits, leftover_sorted); ``row``/``col``
+    address the ``(n_buckets, cap)`` mailbox grid in *sorted* order with
+    out-of-range sentinels for rows that don't ship this hop.
+    ``leftover_sorted`` marks valid messages beyond bucket capacity.
+    """
+    order, skey, pos, _ = sort_and_group(coord, valid, n_buckets)
+    infit = skey < n_buckets
+    fits = infit & (pos < cap)
     row = jnp.where(fits, skey, n_buckets).astype(jnp.int32)
     col = jnp.where(fits, pos, cap).astype(jnp.int32)
+    return order, row, col, fits, infit & ~fits
 
-    def scatter(leaf):
-        sleaf = leaf[order]
-        buf = jnp.zeros((n_buckets + 1, cap + 1) + leaf.shape[1:], leaf.dtype)
-        buf = buf.at[row, col].set(sleaf, mode="drop")
-        return buf[:n_buckets, :cap]
 
-    buffers = {k: scatter(v) for k, v in payload.items()}
-    bval = jnp.zeros((n_buckets + 1, cap + 1), jnp.bool_).at[row, col].set(fits, mode="drop")
-    leftover_sorted = jnp.where(skey < n_buckets, ~fits, False)
-    leftover = jnp.zeros(q, jnp.bool_).at[order].set(leftover_sorted)
-    return buffers, bval[:n_buckets, :cap], leftover
+def _scatter_leaf(leaf_sorted: jax.Array, flat: jax.Array, n_rows: int):
+    """Scatter sorted rows to flat mailbox slots (OOB slots dropped)."""
+    buf = jnp.zeros((n_rows,) + leaf_sorted.shape[1:], leaf_sorted.dtype)
+    return buf.at[flat].set(leaf_sorted, mode="drop")
+
+
+# --------------------------------------------------------------------------
+# routing
+# --------------------------------------------------------------------------
+
+def _check_payload(payload: dict[str, jax.Array], track_src: bool):
+    for k in RESERVED_KEYS:
+        if k in payload:
+            raise ValueError(f"payload key {k!r} is reserved")
+    if track_src and "src" in payload:
+        raise ValueError("track_src=True would overwrite payload key 'src'")
+
+
+def _route_impl(plan: MeshPlan, caps: Sequence[int],
+                payload: dict[str, jax.Array], dest: jax.Array,
+                valid: jax.Array, track_src: bool, queue_cap: int | None):
+    """Shared body of :func:`route` and :func:`route_compact`.
+
+    With ``queue_cap`` set, per-hop leftovers are compacted into a
+    single queue *by the bucket sort itself* (prefix-sum slots over the
+    sorted order — no extra sort); otherwise they are returned as the
+    legacy per-hop fragment list.
+    """
+    hops = plan.indirection.hops
+    assert len(caps) == len(hops)
+    _check_payload(payload, track_src)
+    user_keys = tuple(payload.keys())
+
+    cur = dict(payload)
+    cur["_dest"] = dest.astype(jnp.int32)
+    cur_valid = valid
+    src_acc = None
+    leftovers = []
+    if queue_cap is not None:
+        lq = {k: jnp.zeros((queue_cap,) + v.shape[1:], v.dtype)
+              for k, v in payload.items()}
+        lq_dest = jnp.zeros(queue_cap, jnp.int32)
+        nleft = jnp.int32(0)
+    stats = {"sent": [], "leftover": jnp.int32(0)}
+
+    for h, (hop, cap) in enumerate(zip(hops, caps)):
+        s = plan.hop_size(hop)
+        q = cur_valid.shape[0]
+        coord = plan.hop_coord(cur["_dest"], hop)
+        order, row, col, fits, leftover_sorted = _bucket_indices(
+            coord, cur_valid, s, cap)
+        flat = row * cap + col  # ≥ s*cap for non-shipping rows
+        # input-aligned mailbox slot: message i ships to slot io_flat[i]
+        # (out of range => stays). One index scatter replaces a sorted
+        # gather per payload leaf below.
+        io_flat = jnp.full(q, s * cap + cap, jnp.int32).at[order].set(flat)
+
+        nl = jnp.sum(leftover_sorted).astype(jnp.int32)
+        if queue_cap is None:
+            left_mask = jnp.zeros(q, jnp.bool_).at[order].set(leftover_sorted)
+            leftovers.append(({k: cur[k] for k in user_keys},
+                              cur["_dest"], cur_valid & left_mask))
+        else:
+            lpos = nleft + jnp.cumsum(leftover_sorted.astype(jnp.int32)) - 1
+            lslot = jnp.where(leftover_sorted, lpos, queue_cap)
+            io_lslot = jnp.full(q, queue_cap, jnp.int32).at[order].set(lslot)
+            for k in lq:
+                lq[k] = lq[k].at[io_lslot].set(cur[k], mode="drop")
+            lq_dest = lq_dest.at[io_lslot].set(cur["_dest"], mode="drop")
+            nleft = nleft + nl
+        stats["sent"].append(jnp.sum(fits))
+        stats["leftover"] = stats["leftover"] + nl
+
+        # exchange: mailbox row b goes to the peer with coordinate b
+        # along `hop`. The packed buffer is column-major (word-planes
+        # first) so pack/unpack stay plane-contiguous; the collective
+        # splits/concats the mailbox-row axis.
+        if plan.wire_packing:
+            wf = WireFormat.from_payload(cur)
+            buf = _pack_scatter(plan, wf, cur, cur_valid, io_flat, s, cap)
+            recv = lax.all_to_all(buf, hop, 1, 1, tiled=True)  # 1 collective
+            cur, cur_valid = wf.unpack_cols(recv.reshape(wf.width, s * cap))
+        else:
+            recv = {}
+            for k, v in cur.items():
+                b = _scatter_leaf(v, io_flat, s * cap
+                                  ).reshape((s, cap) + v.shape[1:])
+                recv[k] = lax.all_to_all(b, hop, 0, 0, tiled=True)
+            bval = _scatter_leaf(cur_valid, io_flat, s * cap).reshape(s, cap)
+            rval = lax.all_to_all(bval, hop, 0, 0, tiled=True)
+            cur = {k: v.reshape((s * cap,) + v.shape[2:])
+                   for k, v in recv.items()}
+            cur_valid = rval.reshape(s * cap)
+
+        if track_src:
+            # Sender reconstruction from the receive-buffer row index:
+            # mailbox row b was filled by the peer whose coordinate
+            # along `hop` is b (remaining axes match the receiver's
+            # own), so accumulating the per-hop contributions over all
+            # hops yields the full origin PE id — no 'src' leaf ever
+            # leaves the origin. Valid only for messages that traverse
+            # every hop in this call (leftovers are *not* re-routable
+            # with track_src; remote_gather re-requests from origin).
+            contrib = jnp.asarray(
+                np.repeat(plan.hop_coord_to_pe(hop), cap), jnp.int32)
+            prev = cur.pop("_src", None)
+            src_acc = contrib if prev is None else prev + contrib
+            if h < len(hops) - 1:
+                cur["_src"] = src_acc
+
+    delivered = {k: cur[k] for k in user_keys}
+    if track_src:
+        delivered["src"] = src_acc
+    if queue_cap is not None:
+        qv = jnp.arange(queue_cap, dtype=jnp.int32) < jnp.minimum(
+            nleft, queue_cap)
+        dropped = jnp.maximum(nleft - queue_cap, 0)
+        return delivered, cur_valid, (lq, lq_dest, qv, dropped), stats
+    return delivered, cur_valid, leftovers, stats
+
+
+def _pack_scatter(plan: MeshPlan, wf: WireFormat, payload, valid,
+                  io_flat, n_buckets: int, cap: int) -> jax.Array:
+    """Pack + bucket-scatter into the (W, n_buckets, cap) send buffer."""
+    from repro.kernels.mailbox_pack import ops as mp_ops
+    cols = wf.columns(payload, valid)
+    buf = mp_ops.mailbox_pack(cols, io_flat, n_buckets * cap,
+                              use_pallas=plan.pallas_pack)
+    return buf.reshape(wf.width, n_buckets, cap)
 
 
 def route(plan: MeshPlan, caps: Sequence[int], payload: dict[str, jax.Array],
-          dest: jax.Array, valid: jax.Array):
+          dest: jax.Array, valid: jax.Array, track_src: bool = False):
     """Route messages to their destination PE through the plan's hops.
 
     Args:
@@ -132,6 +438,9 @@ def route(plan: MeshPlan, caps: Sequence[int], payload: dict[str, jax.Array],
       payload: dict of (Q, ...) arrays.
       dest: (Q,) destination PE ids (flattened over pe_axes).
       valid: (Q,) mask.
+      track_src: reconstruct each message's origin PE from receive-
+        buffer row indices (see :func:`_route_impl`); the result is
+        returned as ``delivered["src"]`` without shipping a source leaf.
 
     Returns:
       delivered: dict of (R, ...) arrays (R = hop_size[-1] * caps[-1]),
@@ -140,65 +449,69 @@ def route(plan: MeshPlan, caps: Sequence[int], payload: dict[str, jax.Array],
         stuck on this PE awaiting the next round,
       stats: dict with per-hop sent counts and total leftover count.
     """
-    hops = plan.indirection.hops
-    assert len(caps) == len(hops)
-    cur_payload = dict(payload)
-    cur_payload["_dest"] = dest
-    cur_valid = valid
-    leftovers = []
-    stats = {"sent": [], "leftover": jnp.int32(0)}
-    for hop, cap in zip(hops, caps):
-        s = plan.hop_size(hop)
-        coord = plan.hop_coord(cur_payload["_dest"], hop)
-        buffers, bval, left = _bucket(cur_payload, coord, cur_valid, s, cap)
-        left_payload = {k: v for k, v in cur_payload.items() if k != "_dest"}
-        leftovers.append((left_payload,
-                          cur_payload["_dest"],
-                          cur_valid & left))
-        stats["sent"].append(jnp.sum(bval))
-        stats["leftover"] = stats["leftover"] + jnp.sum(cur_valid & left).astype(jnp.int32)
-        # exchange: row b goes to peer with coordinate b along `hop`
-        recv = {k: lax.all_to_all(v, hop, 0, 0, tiled=True) for k, v in buffers.items()}
-        rval = lax.all_to_all(bval, hop, 0, 0, tiled=True)
-        cur_payload = {k: v.reshape((s * cap,) + v.shape[2:]) for k, v in recv.items()}
-        cur_valid = rval.reshape(s * cap)
-    delivered = {k: v for k, v in cur_payload.items() if k != "_dest"}
-    return delivered, cur_valid, leftovers, stats
+    return _route_impl(plan, caps, payload, dest, valid, track_src,
+                       queue_cap=None)
 
 
-def compact_queue(entries: Sequence[tuple[dict[str, jax.Array], jax.Array, jax.Array]],
+def route_compact(plan: MeshPlan, caps: Sequence[int],
+                  frags: Sequence[tuple[dict[str, jax.Array], jax.Array,
+                                        jax.Array]],
+                  queue_cap: int):
+    """Route concatenated fragments; leftovers come back as one compact
+    queue. The first-hop bucket sort *is* the queue compaction — a chase
+    round costs a single stable sort per hop, with no separate
+    ``compact_queue`` pass.
+
+    Returns (delivered, delivered_valid, (queue_payload, queue_dest,
+    queue_valid), dropped, stats).
+    """
+    payload, dest, valid = _concat_frags(frags)
+    delivered, dval, (qpl, qd, qv, dropped), stats = _route_impl(
+        plan, caps, payload, dest, valid, track_src=False,
+        queue_cap=queue_cap)
+    return delivered, dval, (qpl, qd, qv), dropped, stats
+
+
+def _concat_frags(entries):
+    keys = tuple(entries[0][0].keys())
+    for pl, _, _ in entries:
+        if tuple(pl.keys()) != keys and set(pl.keys()) != set(keys):
+            raise ValueError("fragments must share payload keys")
+    payload = {k: jnp.concatenate([pl[k] for pl, _, _ in entries], axis=0)
+               for k in keys}
+    dest = jnp.concatenate([d for _, d, _ in entries], axis=0)
+    valid = jnp.concatenate([v for _, _, v in entries], axis=0)
+    return payload, dest, valid
+
+
+def compact_queue(entries: Sequence[tuple[dict[str, jax.Array], jax.Array,
+                                          jax.Array]],
                   cap: int):
     """Merge (payload, dest, valid) fragments into one queue of size cap.
 
-    Valid entries are packed to the front. Returns (payload, dest, valid,
+    Valid entries are packed to the front *in order* by a prefix-sum
+    scatter — O(Q), no sort. Returns (payload, dest, valid,
     dropped_count) — dropped_count > 0 means ``cap`` was too small and
     the run must be retried with larger capacities.
     """
-    keys = set()
-    for pl, _, _ in entries:
-        keys |= set(pl.keys())
-    cat_payload = {}
-    for k in keys:
-        cat_payload[k] = jnp.concatenate([pl[k] for pl, _, _ in entries], axis=0)
-    cat_dest = jnp.concatenate([d for _, d, _ in entries], axis=0)
-    cat_valid = jnp.concatenate([v for _, _, v in entries], axis=0)
-    total = cat_valid.shape[0]
-    if total < cap:  # pad up to capacity (small instances / levels)
-        pad = cap - total
-        cat_payload = {k: jnp.concatenate(
-            [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)])
-            for k, v in cat_payload.items()}
-        cat_dest = jnp.concatenate([cat_dest, jnp.zeros(pad, cat_dest.dtype)])
-        cat_valid = jnp.concatenate([cat_valid, jnp.zeros(pad, jnp.bool_)])
-    order = jnp.argsort(~cat_valid, stable=True)  # valid first
+    cat_payload, cat_dest, cat_valid = _concat_frags(entries)
+    pos = jnp.cumsum(cat_valid.astype(jnp.int32)) - 1
+    slot = jnp.where(cat_valid, pos, cap)  # cap => dropped by mode="drop"
+    out_payload = {
+        k: jnp.zeros((cap,) + v.shape[1:], v.dtype).at[slot].set(
+            v, mode="drop")
+        for k, v in cat_payload.items()}
+    out_dest = jnp.zeros(cap, cat_dest.dtype).at[slot].set(
+        cat_dest, mode="drop")
     n_valid = jnp.sum(cat_valid).astype(jnp.int32)
-    take = order[:cap]
-    out_payload = {k: v[take] for k, v in cat_payload.items()}
-    out_dest = cat_dest[take]
     out_valid = jnp.arange(cap, dtype=jnp.int32) < jnp.minimum(n_valid, cap)
     dropped = jnp.maximum(n_valid - cap, 0)
     return out_payload, out_dest, out_valid, dropped
 
+
+# --------------------------------------------------------------------------
+# request/response gather
+# --------------------------------------------------------------------------
 
 def remote_gather(plan: MeshPlan, targets: jax.Array, valid: jax.Array,
                   owner_of: Callable[[jax.Array], jax.Array],
@@ -209,6 +522,8 @@ def remote_gather(plan: MeshPlan, targets: jax.Array, valid: jax.Array,
     The paper's ruler-propagation and §2.5 postprocessing both reduce to
     this primitive; ``dedup=True`` implements the paper's per-PE request
     aggregation (identical targets are asked once, then fanned back out).
+    Requests carry no source-PE leaf: the responder rebuilds the origin
+    from receive-buffer row indices (``route(track_src=True)``).
 
     Args:
       targets: (Q,) global element ids to query.
@@ -226,32 +541,29 @@ def remote_gather(plan: MeshPlan, targets: jax.Array, valid: jax.Array,
     """
     q = targets.shape[0]
     if dedup:
-        key = jnp.where(valid, targets, jnp.iinfo(targets.dtype).max)
-        order = jnp.argsort(key)
-        skey = key[order]
-        is_uniq = jnp.concatenate([jnp.ones(1, jnp.bool_), skey[1:] != skey[:-1]])
-        is_uniq = is_uniq & (skey != jnp.iinfo(targets.dtype).max)
-        group = jnp.cumsum(is_uniq) - 1  # sorted-slot -> unique-slot
-        uniq_slot = jnp.where(is_uniq, group, q - 1).astype(jnp.int32)
+        order, skey, _, newrun = sort_and_group(targets, valid, INT_MAX)
+        is_uniq = newrun & (skey != INT_MAX)
+        group = jnp.cumsum(is_uniq.astype(jnp.int32)) - 1
+        uniq_slot = jnp.where(is_uniq, group, q)
         req_targets = jnp.zeros(q, targets.dtype).at[uniq_slot].set(
-            jnp.where(is_uniq, skey, 0), mode="drop")
+            skey, mode="drop")
         n_uniq = jnp.sum(is_uniq).astype(jnp.int32)
         req_valid = jnp.arange(q, dtype=jnp.int32) < n_uniq
         # original slot i -> unique slot group[rank of i in sort]
-        inv = jnp.zeros(q, jnp.int32).at[order].set(group.astype(jnp.int32))
+        inv = jnp.zeros(q, jnp.int32).at[order].set(group)
     else:
-        req_targets, req_valid, inv = targets, valid, jnp.arange(q, dtype=jnp.int32)
+        req_targets, req_valid = targets, valid
+        inv = jnp.arange(q, dtype=jnp.int32)
 
-    me = plan.my_id().astype(jnp.int32)
     payload = {
         "target": req_targets,
         "slot": jnp.arange(q, dtype=jnp.int32),
-        "src": jnp.full((q,), 0, jnp.int32) + me,
     }
     dest = owner_of(req_targets).astype(jnp.int32)
     caps_req = list(req_cap) if isinstance(req_cap, (tuple, list)) \
         else [req_cap] * plan.indirection.depth
-    delivered, dval, leftovers, st_req = route(plan, caps_req, payload, dest, req_valid)
+    delivered, dval, leftovers, st_req = route(plan, caps_req, payload, dest,
+                                               req_valid, track_src=True)
     req_left = sum(jnp.sum(lv).astype(jnp.int32) for _, _, lv in leftovers)
 
     # answer on the owner
@@ -261,16 +573,19 @@ def remote_gather(plan: MeshPlan, targets: jax.Array, valid: jax.Array,
     resp_dest = delivered["src"]
     caps_resp = list(resp_cap) if isinstance(resp_cap, (tuple, list)) \
         else [resp_cap] * plan.indirection.depth
-    rdel, rval, rleft, st_resp = route(plan, caps_resp, resp_payload, resp_dest, dval)
+    rdel, rval, rleft, st_resp = route(plan, caps_resp, resp_payload,
+                                       resp_dest, dval)
     resp_left = sum(jnp.sum(lv).astype(jnp.int32) for _, _, lv in rleft)
 
     # scatter responses into the unique-request table
     slot = jnp.where(rval, rdel["slot"], q).astype(jnp.int32)
     uniq_values = {}
-    uniq_answered = jnp.zeros(q + 1, jnp.bool_).at[slot].set(rval, mode="drop")[:q]
+    uniq_answered = jnp.zeros(q + 1, jnp.bool_).at[slot].set(
+        rval, mode="drop")[:q]
     for k in values:
         leaf = rdel[k]
-        buf = jnp.zeros((q + 1,) + leaf.shape[1:], leaf.dtype).at[slot].set(leaf, mode="drop")
+        buf = jnp.zeros((q + 1,) + leaf.shape[1:], leaf.dtype
+                        ).at[slot].set(leaf, mode="drop")
         uniq_values[k] = buf[:q]
     out = {k: v[inv] for k, v in uniq_values.items()}
     answered = uniq_answered[inv] & valid

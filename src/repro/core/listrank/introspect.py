@@ -1,0 +1,52 @@
+"""Jaxpr introspection: count primitives (notably collectives) in a
+traced program.
+
+The paper's §2.6 alpha-beta model says per-round *collective count* is
+the quantity that governs scaling; the packed wire format exists to
+drive it to one ``all_to_all`` per hop. These helpers make that claim
+checkable — tests assert the exact count and the exchange
+microbenchmark records it in the perf trajectory.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+#: primitive names that hit the interconnect.
+COLLECTIVE_PRIMS = ("all_to_all", "all_gather", "psum", "ppermute",
+                    "reduce_scatter", "all_reduce")
+
+
+def _sub_jaxprs(value: Any):
+    """Yield jaxprs nested inside an eqn param (pjit, while, cond, ...)."""
+    if hasattr(value, "eqns"):          # Jaxpr
+        yield value
+    elif hasattr(value, "jaxpr"):       # ClosedJaxpr
+        yield value.jaxpr
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _sub_jaxprs(v)
+
+
+def count_primitives(jaxpr) -> dict[str, int]:
+    """Recursively count primitive applications in a (closed) jaxpr."""
+    counts: dict[str, int] = {}
+
+    def visit(jx):
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            counts[name] = counts.get(name, 0) + 1
+            for v in eqn.params.values():
+                for sub in _sub_jaxprs(v):
+                    visit(sub)
+
+    visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return counts
+
+
+def collective_counts(fn: Callable, *args, **kwargs) -> dict[str, int]:
+    """Trace ``fn(*args)`` and count collective primitives in it."""
+    jaxpr = jax.make_jaxpr(fn, **kwargs)(*args)
+    counts = count_primitives(jaxpr)
+    return {k: v for k, v in counts.items() if k in COLLECTIVE_PRIMS}

@@ -32,7 +32,8 @@ from jax import lax
 from repro.core.listrank import store as store_lib
 from repro.core.listrank.config import ListRankConfig
 from repro.core.listrank.doubling import allgather_solve, doubling_solve
-from repro.core.listrank.exchange import MeshPlan, compact_queue, remote_gather, route
+from repro.core.listrank.exchange import (MeshPlan, compact_queue,
+                                          remote_gather, route_compact)
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -102,7 +103,8 @@ def gather_until_done(plan: MeshPlan, targets, valid, owner_of, lookup_fn,
 def route_until_done(plan: MeshPlan, caps, payload, dest, valid,
                      deliver_fn, carry, max_iters=64):
     """Route messages, applying deliver_fn(carry, delivered, dvalid) each
-    round, re-queuing leftovers until everything is delivered."""
+    round, re-queuing leftovers until everything is delivered. Leftover
+    compaction is fused into the routing sort (route_compact)."""
     q = dest.shape[0]
 
     def cond(c):
@@ -110,9 +112,9 @@ def route_until_done(plan: MeshPlan, caps, payload, dest, valid,
 
     def body(c):
         carry, payload, dest, valid, _, it, msgs = c
-        delivered, dval, leftovers, st = route(plan, caps, payload, dest, valid)
+        delivered, dval, (npl, nd, nv), dropped, st = route_compact(
+            plan, caps, [(payload, dest, valid)], q)
         carry = deliver_fn(carry, delivered, dval)
-        npl, nd, nv, dropped = compact_queue(leftovers, q)
         pending = lax.psum(jnp.sum(nv).astype(jnp.int32) + dropped, plan.pe_axes)
         return carry, npl, nd, nv, pending, it + 1, msgs + sum(st["sent"])
 
@@ -180,26 +182,46 @@ def _spawn(st, visited, is_ruler, perm, perm_pos, window, k):
     return st, visited, is_ruler, new_pos, emissions, k - spawned
 
 
+def _zero_frag(n: int, rank_dtype):
+    """An all-invalid chase-message fragment of static size n."""
+    payload = {"target": jnp.zeros(n, jnp.int32),
+               "ruler": jnp.zeros(n, jnp.int32),
+               "weight": jnp.zeros(n, rank_dtype)}
+    return payload, jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.bool_)
+
+
 def _chase(plan: MeshPlan, spec: LevelSpec, owner_of, st, visited, is_ruler,
            is_sub, forced, perm, r_target, stats):
-    """The wave loop: launch → (route → process → spawn → requeue)*,
-    with an outer restart loop guaranteeing coverage."""
+    """The wave loop: launch → (route → process → spawn)*, with an outer
+    restart loop guaranteeing coverage.
+
+    The round state is three fixed-shape fragments — the compacted
+    leftover queue plus the previous round's forward/spawn emissions —
+    routed together by ``route_compact``, whose bucket sort doubles as
+    queue compaction: one stable sort per hop per round, no separate
+    requeue pass (see DESIGN.md)."""
     cap = st.ids.shape[0]
     qc = spec.queue_cap
+    rank_dtype = st.rank.dtype
+    inbox = plan.hop_size(plan.indirection.hops[-1]) * spec.mail_caps[-1]
 
-    def enqueue(frags):
-        qpl, qd, qv, dropped = compact_queue(frags, qc)
-        return (qpl, qd, qv), dropped
+    def emit_frag(emissions):
+        pl, ev = emissions
+        return pl, owner_of(pl["target"]).astype(jnp.int32), ev
+
+    def fresh_frags(queue):
+        return (queue, _zero_frag(inbox, rank_dtype),
+                _zero_frag(spec.spawn_window, rank_dtype))
 
     def rounds(carry):
         def cond(c):
             return (c[-2] > 0) & (c[-1] < spec.max_rounds)
 
         def body(c):
-            (st, visited, is_ruler, is_sub, perm_pos, (qpl, qd, qv),
+            (st, visited, is_ruler, is_sub, perm_pos, (queue, fwd, spawn),
              stats, _, rounds_done) = c
-            delivered, dval, leftovers, rst = route(
-                plan, spec.mail_caps, qpl, qd, qv)
+            delivered, dval, queue2, dropped, rst = route_compact(
+                plan, spec.mail_caps, [queue, fwd, spawn], qc)
             slots, found = store_lib.slot_of(st, delivered["target"])
             ok = dval & found
             old_succ = st.succ[slots]
@@ -211,18 +233,17 @@ def _chase(plan: MeshPlan, spec: LevelSpec, owner_of, st, visited, is_ruler,
                 st, slots, ok, succ=delivered["ruler"], rank=delivered["weight"])
             visited = visited.at[jnp.where(ok, slots, cap)].set(True, mode="drop")
             # forward the wave (l.13) unless it died on a ruler/terminal
-            fwd = ({"target": old_succ, "ruler": delivered["ruler"],
-                    "weight": delivered["weight"] + old_rank}, ok & ~die)
+            fwd2 = emit_frag(({"target": old_succ, "ruler": delivered["ruler"],
+                               "weight": delivered["weight"] + old_rank},
+                              ok & ~die))
             # ruler spawning (l.9-11): one new wave per death
             k = jnp.sum(ok & die).astype(jnp.int32)
             st, visited, is_ruler, perm_pos, spawn_emit, lost = _spawn(
                 st, visited, is_ruler, perm, perm_pos, spec.spawn_window, k)
             is_sub = is_sub | is_ruler
-            frags = list(leftovers)
-            for pl, ev in (fwd, spawn_emit):
-                frags.append((pl, owner_of(pl["target"]).astype(jnp.int32), ev))
-            (qpl, qd, qv), dropped = enqueue(frags)
-            qcount = jnp.sum(qv).astype(jnp.int32)
+            spawn2 = emit_frag(spawn_emit)
+            qcount = (jnp.sum(queue2[2]) + jnp.sum(fwd2[2])
+                      + jnp.sum(spawn2[2])).astype(jnp.int32)
             pending = lax.psum(qcount + dropped, plan.pe_axes)
             stats = _merge(stats, {
                 "rounds": jnp.int32(1),
@@ -233,7 +254,7 @@ def _chase(plan: MeshPlan, spec: LevelSpec, owner_of, st, visited, is_ruler,
                 "max_queue": qcount,
             })
             return (st, visited, is_ruler, is_sub, perm_pos,
-                    (qpl, qd, qv), stats, pending, rounds_done + 1)
+                    (queue2, fwd2, spawn2), stats, pending, rounds_done + 1)
 
         return lax.while_loop(cond, body, carry)
 
@@ -245,20 +266,19 @@ def _chase(plan: MeshPlan, spec: LevelSpec, owner_of, st, visited, is_ruler,
     (st, visited, is_ruler, rand_emit), consumed, n_rulers = _launch_from_perm(
         st, visited, is_ruler, perm, r_target)
     is_sub = is_sub | is_ruler
-    frags = [(pl, owner_of(pl["target"]).astype(jnp.int32), ev)
-             for pl, ev in (forced_emit, rand_emit)]
-    q0, drop0 = enqueue(frags)
+    qpl, qd, qv, drop0 = compact_queue(
+        [emit_frag(forced_emit), emit_frag(rand_emit)], qc)
     stats = _merge(stats, {
         "dropped": drop0,
         "rulers": n_rulers + jnp.sum(forced).astype(jnp.int32)})
-    pend0 = lax.psum(jnp.sum(q0[2]).astype(jnp.int32), plan.pe_axes)
-    carry = (st, visited, is_ruler, is_sub, consumed, q0, stats, pend0,
-             jnp.int32(0))
+    pend0 = lax.psum(jnp.sum(qv).astype(jnp.int32), plan.pe_axes)
+    carry = (st, visited, is_ruler, is_sub, consumed,
+             fresh_frags((qpl, qd, qv)), stats, pend0, jnp.int32(0))
     carry = rounds(carry)
 
     # restart loop: cover stragglers (forward-chasing deadlock or spawn-
     # window losses — rare; see DESIGN.md). New rulers from the unvisited
-    # pool; the drained queue is carried through untouched.
+    # pool; the drained fragments are folded into the fresh queue.
     def uncovered_of(c):
         st, visited = c[0], c[1]
         return lax.psum(jnp.sum(st.valid & ~visited).astype(jnp.int32),
@@ -269,18 +289,18 @@ def _chase(plan: MeshPlan, spec: LevelSpec, owner_of, st, visited, is_ruler,
 
     def r_body(c):
         carry, _, restarts = c
-        (st, visited, is_ruler, is_sub, perm_pos, queue, stats, _, rd) = carry
+        (st, visited, is_ruler, is_sub, perm_pos, (queue, fwd, spawn),
+         stats, _, rd) = carry
         (st, visited, is_ruler, emit), _, n1 = _launch_from_perm(
             st, visited, is_ruler, perm, r_target)
         is_sub = is_sub | is_ruler
-        frags = [queue, (emit[0], owner_of(emit[0]["target"]).astype(jnp.int32),
-                         emit[1])]
-        q1, drop1 = enqueue(frags)
+        qpl, qd, qv, drop1 = compact_queue(
+            [queue, fwd, spawn, emit_frag(emit)], qc)
         stats = _merge(stats, {"dropped": drop1, "rulers": n1,
                                "restarts": jnp.int32(1)})
-        pend = lax.psum(jnp.sum(q1[2]).astype(jnp.int32), plan.pe_axes)
-        carry = rounds((st, visited, is_ruler, is_sub, perm_pos, q1, stats,
-                        pend, rd))
+        pend = lax.psum(jnp.sum(qv).astype(jnp.int32), plan.pe_axes)
+        carry = rounds((st, visited, is_ruler, is_sub, perm_pos,
+                        fresh_frags((qpl, qd, qv)), stats, pend, rd))
         return carry, uncovered_of(carry), restarts + 1
 
     carry, uncovered, _ = lax.while_loop(

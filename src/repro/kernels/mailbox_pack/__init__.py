@@ -1,0 +1,2 @@
+"""Fused wire-packing + mailbox bucket-scatter kernel (exchange layer)."""
+from repro.kernels.mailbox_pack.ops import mailbox_pack  # noqa: F401

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused wire-pack + mailbox bucket-scatter.
+
+The packed exchange path (see ``repro.core.listrank.exchange``) needs,
+per hop, the column-major ``(W, n_buckets*cap)`` int32 send buffer
+
+    out[w, slots[i]] = cols[w][i]   for every shipping message i
+
+where ``cols`` are the W bit-cast wire word-planes of the payload and
+``slots`` the input-aligned mailbox slot (out-of-range => the message
+does not ship this hop). XLA runs one scatter per word-plane, touching
+the slot indices W times; this kernel walks the messages once and
+writes each message's W words together, straight from the (unsorted,
+per-leaf) planes resident in VMEM.
+
+Grid: a single program owning the whole buffers in VMEM — Q and the
+mailbox buffer are queue-sized; the VMEM budget is enforced by
+``ops.py``, which falls back to the XLA path otherwise. Interpret mode
+on CPU (this container), compiled on a real TPU — mirroring
+``repro.kernels.local_chase``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(*refs, n_cols: int, n_rows: int):
+    col_refs = refs[:n_cols]
+    slots_ref, out_ref = refs[n_cols:]
+    out_ref[...] = jnp.zeros_like(out_ref)
+    q = slots_ref.shape[0]
+
+    def body(i, carry):
+        f = slots_ref[i]
+
+        @pl.when(f < n_rows)
+        def _():
+            for w in range(n_cols):
+                out_ref[w, pl.ds(f, 1)] = col_refs[w][pl.ds(i, 1)]
+
+        return carry
+
+    jax.lax.fori_loop(0, q, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "interpret"))
+def mailbox_pack_pallas(cols, slots: jax.Array, n_rows: int,
+                        interpret: bool = True) -> jax.Array:
+    """(Q,)*W word-planes + slot indices -> (W, n_rows) send buffer."""
+    n_cols = len(cols)
+    kernel = functools.partial(_pack_kernel, n_cols=n_cols, n_rows=n_rows)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n_cols, n_rows), jnp.int32),
+        interpret=interpret,
+    )(*cols, slots)

@@ -1,0 +1,33 @@
+"""Public wrapper for mailbox_pack: dispatch between the fused Pallas
+kernel and the XLA fallback, with the interpret-mode switch for CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mailbox_pack import kernel as _kernel
+from repro.kernels.mailbox_pack import ref as _ref
+
+#: per-core VMEM budget for the resident working set (planes + buffer).
+VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mailbox_pack(cols, slots: jax.Array, n_rows: int,
+                 use_pallas: bool = False) -> jax.Array:
+    """Build the packed (W, n_rows) int32 mailbox send buffer.
+
+    out[w, slots[i]] = cols[w][i] for messages with slots[i] < n_rows;
+    everything else is zero (invalid on the wire). ``use_pallas`` routes
+    through the fused VMEM kernel when the working set fits.
+    """
+    q = slots.shape[0]
+    w = len(cols)
+    working_set = 4 * (q * (w + 1) + n_rows * w)
+    if use_pallas and working_set <= VMEM_BUDGET:
+        return _kernel.mailbox_pack_pallas(tuple(cols), slots, n_rows,
+                                           interpret=not _on_tpu())
+    return _ref.mailbox_pack_ref(cols, slots, n_rows)

@@ -1,0 +1,14 @@
+"""XLA reference path for mailbox packing: one scatter per wire
+word-plane into the column-major send buffer. Identical results to the
+Pallas kernel (pure data movement)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mailbox_pack_ref(cols, slots: jax.Array, n_rows: int) -> jax.Array:
+    """See :func:`repro.kernels.mailbox_pack.ops.mailbox_pack`."""
+    planes = [jnp.zeros(n_rows, jnp.int32).at[slots].set(c, mode="drop")
+              for c in cols]
+    return jnp.stack(planes)

@@ -13,6 +13,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models.params import spec
 
 # ---------------------------------------------------------------------------
@@ -561,7 +562,7 @@ def moe_ffn_ep(p, x, cfg, ctx):
     in_specs = (dp_spec, P(None, None), w_spec, w_spec, w_spec_t,
                 shared_specs if cfg.num_shared_experts else P())
     shared_p = p.get("shared", jnp.zeros((), x.dtype))
-    out = jax.shard_map(
+    out = compat.shard_map(
         body, mesh=mesh,
         in_specs=in_specs,
         out_specs=(dp_spec, P()),

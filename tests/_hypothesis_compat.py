@@ -1,0 +1,42 @@
+"""Optional-hypothesis shim (satellite of the exchange-layer PR).
+
+Test modules import ``given/settings/strategies`` from here instead of
+hard-importing ``hypothesis``, so the suite collects and runs in
+minimal environments: with hypothesis installed the real library is
+re-exported unchanged; without it, property tests are skipped
+(pytest.importorskip semantics, but scoped to the @given tests instead
+of nuking whole modules) while every example-based test still runs.
+"""
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class HealthCheck:  # noqa: D401 - attribute bag
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+        filter_too_much = "filter_too_much"
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (property test)")(fn)
+        return deco
+
+    class _Strategies:
+        """Inert stand-ins; @given skips before they are ever drawn."""
+
+        def __getattr__(self, name):
+            def strategy(*args, **kwargs):
+                return None
+            return strategy
+
+    st = _Strategies()

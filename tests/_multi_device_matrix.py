@@ -12,14 +12,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core.listrank import (IndirectionSpec, ListRankConfig,  # noqa
                                  instances, rank_list_seq,
                                  rank_list_with_stats)
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("row", "col"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("row", "col"))
     base = ListRankConfig(srs_rounds=1, local_contraction=False)
     grid = IndirectionSpec.grid(("row", "col"))
     topo = IndirectionSpec.topology(("col",), ("row",))
@@ -46,6 +46,12 @@ def main():
         ("euler contract", se, re_, base.with_(local_contraction=True), None),
         ("pallas contract", sg1, rg1,
          base.with_(local_contraction=True, use_pallas=True), None),
+        ("srs1 unpacked wire", sg1, rg1, base.with_(wire_packing=False),
+         None),
+        ("srs1 grid unpacked", sg1, rg1, base.with_(wire_packing=False),
+         grid),
+        ("pallas mailbox pack", sg1, rg1, base.with_(use_pallas_pack=True),
+         None),
     ]
     failures = 0
     for name, succ, rank, cfg, ind in cases:

@@ -5,6 +5,7 @@ import sys
 # exclusively the dry-run's); multi-device list-ranking tests spawn
 # subprocesses that set XLA_FLAGS before importing jax.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))  # _hypothesis_compat et al.
 
 import jax  # noqa: E402
 

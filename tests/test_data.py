@@ -2,8 +2,9 @@
 metadata, determinism; hypothesis on packing invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
+from repro import compat
 from repro.data import packing, pipeline
 
 
@@ -54,8 +55,7 @@ def test_segment_metadata_is_list_ranking():
 
 def test_distributed_matches_oracle():
     import jax
-    mesh = jax.make_mesh((1,), ("pe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("pe",))
     docs = _docs(7, n_docs=30)
     packed = packing.pack_documents(docs, row_len=48)
     t1, a1 = packing.segment_metadata(packed)

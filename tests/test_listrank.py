@@ -4,16 +4,16 @@ hypothesis property tests. Multi-PE runs live in test_listrank_multi."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+from _hypothesis_compat import HealthCheck, given, settings, st
 
+from repro import compat
 from repro.core.listrank import (IndirectionSpec, ListRankConfig, analysis,
                                  instances, rank_list_seq,
                                  rank_list_with_stats)
 
 
 def mesh1():
-    return jax.make_mesh((1,), ("pe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((1,), ("pe",))
 
 
 def run_and_check(succ, rank, cfg, **kw):
@@ -37,6 +37,10 @@ VARIANTS = {
     "allgather_base": BASE.with_(base_case="allgather"),
     "nodedup": BASE.with_(dedup_requests=False),
     "pallas_contract": BASE.with_(local_contraction=True, use_pallas=True),
+    "unpacked": BASE.with_(wire_packing=False),
+    "unpacked_srs2": BASE.with_(srs_rounds=2, local_contraction=True,
+                                wire_packing=False),
+    "pallas_pack": BASE.with_(use_pallas_pack=True),
 }
 
 
@@ -75,6 +79,25 @@ def test_float_weights():
     s, r, _ = rank_list_with_stats(succ, w, mesh1(), cfg=BASE)
     np.testing.assert_array_equal(np.asarray(s), s_ref)
     np.testing.assert_allclose(np.asarray(r), r_ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("make", [
+    lambda: instances.gen_list(256, gamma=1.0, seed=3),
+    lambda: instances.gen_list(256, gamma=0.0, seed=4),
+    lambda: instances.gen_random_lists(256, num_lists=7, seed=5,
+                                       weighted=True),
+])
+def test_packed_unpacked_bit_identical(make):
+    """The packed wire format must be a pure transport change: identical
+    output bits to the unpacked exchange, on every instance."""
+    succ, rank = make()
+    for cfg in (BASE, BASE.with_(srs_rounds=2, local_contraction=True)):
+        s_p, r_p, _ = rank_list_with_stats(succ, rank, mesh1(), cfg=cfg)
+        s_u, r_u, _ = rank_list_with_stats(
+            succ, rank, mesh1(), cfg=cfg.with_(wire_packing=False))
+        np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_u))
+        np.testing.assert_array_equal(
+            np.asarray(r_p).view(np.int32), np.asarray(r_u).view(np.int32))
 
 
 def test_singletons_only():

@@ -4,16 +4,16 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.runtime import sharding as shlib
+from repro import compat
 
 
 def mesh44():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def fake_mesh(shape, names):
     """Abstract mesh for resolution tests (no devices needed)."""
-    return jax.sharding.AbstractMesh(shape, names)
+    return compat.abstract_mesh(shape, names)
 
 
 def test_divisible_dims_shard():
