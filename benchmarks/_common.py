@@ -1,0 +1,46 @@
+"""Shared helpers for the benchmark harnesses.
+
+One subprocess-worker driver and ONE §2.6 large-p projection, so every
+harness (run.py figures, listrank_hillclimb.py, tuning_bench.py)
+reports the same "modeled 24576-core s" quantity — computed from the
+same counted stats with the same wire-word width.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+HERE = pathlib.Path(__file__).parent
+
+
+def run_worker(spec: dict, timeout: int = 3600) -> dict:
+    """Run one measurement in a fresh subprocess (_worker.py): the
+    virtual-device count must be set before jax initializes."""
+    cmd = [sys.executable, str(HERE / "_worker.py"), json.dumps(spec)]
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout)
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(proc.stdout[-400:] + proc.stderr[-1500:])
+
+
+def modeled_large_p(stats: dict, p_meas: int, p_model: int = 24576,
+                    d: int = 2) -> float:
+    """α-β projection of counted per-PE loads to ``p_model`` cores.
+
+    Rounds (chase + base-case doubling) each pay the d-hop startup
+    α·d·p^(1/d); every counted message crosses d hops at the chase
+    wire-format width. Weak scaling keeps both per-PE quantities
+    ~constant, so the p=16 counts stand in for the large-p ones.
+    """
+    from repro.core.listrank import analysis
+    from repro.core.listrank.api import CHASE_WIRE_WORDS
+    m = analysis.SUPERMUC
+    rounds = max((stats.get("rounds", 0) + stats.get("pd_rounds", 0))
+                 // p_meas, 1)
+    msgs = (stats.get("chase_msgs", 0) + stats.get("pd_msgs", 0)
+            + stats.get("fixup_msgs", 0) + stats.get("reversal_msgs", 0))
+    words_pe = float(CHASE_WIRE_WORDS) * msgs / p_meas
+    return (m.alpha * rounds * d * p_model ** (1.0 / max(d, 1))
+            + m.beta * d * words_pe)

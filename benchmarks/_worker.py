@@ -25,7 +25,10 @@ import jax  # noqa: E402
 
 from repro import compat  # noqa: E402
 from repro.core.listrank import (IndirectionSpec, ListRankConfig,  # noqa
-                                 instances, rank_list_with_stats)
+                                 analysis, instances, rank_list_with_stats)
+
+MACHINES = {"supermuc": analysis.SUPERMUC, "tpu": analysis.TPU_V5E_ICI,
+            "intra": analysis.INTRA_NODE}
 
 
 def main():
@@ -53,6 +56,7 @@ def main():
         srs_rounds=spec.get("srs_rounds", 2),
         local_contraction=spec.get("contraction", True),
         ruler_fraction=spec.get("ruler_fraction", 1 / 32),
+        machine=MACHINES[spec.get("machine", "supermuc")],
         avoid_reversal=spec.get("avoid_reversal", True))
     ind = {"direct": None,
            "grid": IndirectionSpec.grid(("row", "col")),

@@ -12,32 +12,13 @@ narrative in EXPERIMENTS.md §Perf.
 """
 import json
 import pathlib
-import subprocess
 import sys
 
 HERE = pathlib.Path(__file__).parent
 sys.path.insert(0, str(HERE.parent / "src"))
+sys.path.insert(0, str(HERE))
 
-from repro.core.listrank import analysis  # noqa: E402
-
-
-def worker(spec):
-    cmd = [sys.executable, str(HERE / "_worker.py"), json.dumps(spec)]
-    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=3600)
-    for line in proc.stdout.splitlines():
-        if line.startswith("RESULT "):
-            return json.loads(line[len("RESULT "):])
-    raise RuntimeError(proc.stdout[-400:] + proc.stderr[-1500:])
-
-
-def modeled_large_p(stats, p_meas, p_model=24576, d=2):
-    """alpha-beta projection to the paper's 24576 cores from counted
-    per-PE message/round loads (weak scaling keeps both ~constant)."""
-    m = analysis.SUPERMUC
-    rounds = max(stats["rounds"] // p_meas, 1)
-    words_pe = 3.0 * (stats["chase_msgs"] + stats["pd_msgs"]
-                      + stats["fixup_msgs"]) / p_meas
-    return (m.alpha * rounds * d * p_model ** (1 / d) + m.beta * d * words_pe)
+from _common import modeled_large_p, run_worker  # noqa: E402
 
 
 BASE = dict(p=16, mesh=(4, 4), n_per_pe=1 << 15, gamma=1.0,
@@ -67,7 +48,7 @@ def main():
     for name, kw in STEPS:
         spec = dict(BASE)
         spec.update(kw)
-        r = worker(spec)
+        r = run_worker(spec)
         row = {
             "name": name,
             "wall_s_min": r["wall_s_min"],

@@ -56,6 +56,17 @@ def main():
     print(f"r* from the cost model (SuperMUC constants): "
           f"{analysis.r_star(n, p, 2, analysis.SUPERMUC)}")
 
+    # same run, parameters derived from the §2.6 cost model instead of
+    # hand-set: ruler_fraction=None -> per-level r* (tuner.level_plan)
+    auto = cfg.with_(ruler_fraction=None)
+    _, rank_auto, stats_auto = rank_list_with_stats(
+        succ, rank, mesh, cfg=auto,
+        indirection=IndirectionSpec.grid(("row", "col")))
+    assert np.array_equal(np.asarray(rank_auto), r_ref)
+    print(f"auto-tuned (ruler_fraction=None): "
+          f"rounds {stats_auto['rounds'] // p} vs {stats['rounds'] // p} "
+          f"fixed, rulers {stats_auto['rulers']} vs {stats['rulers']}")
+
 
 if __name__ == "__main__":
     main()

@@ -9,7 +9,7 @@ mesh collectives.
 from repro.core.listrank.config import ListRankConfig, IndirectionSpec
 from repro.core.listrank.api import rank_list, rank_list_with_stats
 from repro.core.listrank.sequential import rank_list_seq
-from repro.core.listrank import instances, analysis
+from repro.core.listrank import instances, analysis, tuner
 
 __all__ = [
     "ListRankConfig",
@@ -19,4 +19,5 @@ __all__ = [
     "rank_list_seq",
     "instances",
     "analysis",
+    "tuner",
 ]

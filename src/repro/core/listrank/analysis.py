@@ -8,8 +8,9 @@ PE as  T_all2all(p,h,d) = alpha*d*p^(1/d) + beta*d*h  and derives
 
 with the optimum  r* = Theta( sqrt(alpha*n*p^(1+1/d)/beta) / log p ).
 
-We use the model for (a) choosing the ruler count when
-``ListRankConfig.ruler_fraction is None``, (b) the benchmark harness's
+The model is consumed by :mod:`repro.core.listrank.tuner` for (a) the
+per-level ruler counts when ``ListRankConfig.ruler_fraction is None``
+plus indirection/algorithm selection, (b) the benchmark harness's
 modeled communication times (this container measures a single CPU, so
 wall-clock alpha effects are modeled from counted messages with
 machine constants), and (c) the EXPERIMENTS.md validation of the
@@ -58,6 +59,27 @@ def t_model(n: int, p: int, r: int, d: int, m: MachineModel,
     t_chase = d * m.beta * n / p + m.alpha * d * p ** (1.0 / d) * (n / max(r, 1))
     t_base = math.log2(max(n_prime, 2)) * (
         m.alpha * d * p ** (1.0 / d) + m.beta * d * n_prime / p)
+    return t_chase + t_base
+
+
+def t_hops(n: int, p: int, r: int, hop_sizes: "tuple[int, ...]",
+           hop_machines: "tuple[MachineModel, ...]") -> float:
+    """Generalization of :func:`t_model` to an explicit hop decomposition
+    with per-hop machine constants (topology-aware indirection routes
+    its first hop over intra-node links, which have a different alpha).
+
+    One routing round costs ``sum_h alpha_h * hop_size(h)`` in startups
+    (each hop is a dense all_to_all over its peer group) and every
+    message crosses every hop, so the volume coefficient is
+    ``sum_h beta_h``. Used by ``tuner.choose_indirection``.
+    """
+    logp = max(math.log2(max(p, 2)), 1.0)
+    startup = sum(m.alpha * s for s, m in zip(hop_sizes, hop_machines))
+    beta_eff = sum(m.beta for m in hop_machines)
+    rounds = n / max(r, 1) + logp
+    n_prime = expected_subproblem(n, r)
+    t_chase = beta_eff * n / p + startup * rounds
+    t_base = math.log2(max(n_prime, 2)) * (startup + beta_eff * n_prime / p)
     return t_chase + t_base
 
 

@@ -12,8 +12,11 @@ pipeline:
 
 Every capacity (mailboxes, queues, subproblem stores) is host-derived
 from the instance parameters with configurable slack; runs that hit any
-capacity report it in ``stats`` and the driver retries with doubled
-slack. Capacity therefore affects only performance, never correctness.
+capacity report it in ``stats`` and the driver retries, doubling only
+the capacity family whose fatal stat fired (tuner.escalate). Capacity
+therefore affects only performance, never correctness. Parameter
+defaults (ruler fractions, indirection, SRS-vs-PD) can be derived from
+the §2.6 cost model — see repro.core.listrank.tuner.
 """
 from __future__ import annotations
 
@@ -30,6 +33,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.core.listrank import local as local_lib
 from repro.core.listrank import store as store_lib
+from repro.core.listrank import tuner
 from repro.core.listrank.config import IndirectionSpec, ListRankConfig
 from repro.core.listrank.doubling import doubling_solve
 from repro.core.listrank import exchange as exchange_lib
@@ -54,49 +58,63 @@ CHASE_WIRE_WORDS = exchange_lib.WireFormat.for_leaves(
 
 
 def build_specs(cfg: ListRankConfig, plan: MeshPlan, m: int, n: int,
-                term_bound: int, slack_mult: float = 1.0) -> tuple[LevelSpec, ...]:
-    """Host-side derivation of every static capacity (see module doc)."""
-    frac = cfg.ruler_fraction if cfg.ruler_fraction is not None else 1.0 / 32.0
+                term_bound: int,
+                scales: tuner.CapacityScales = tuner.CapacityScales(),
+                ) -> tuple[LevelSpec, ...]:
+    """Host-side derivation of every static capacity (see module doc).
+
+    Per-level ruler fractions come from :func:`tuner.level_plan` — the
+    cost model when ``cfg.ruler_fraction is None``, the fixed fraction
+    otherwise. ``scales`` carries the targeted retry multipliers
+    (chase mail/queue, sub store, gather) from the driver's retry loop.
+    """
+    levels = tuner.level_plan(cfg, plan.p, plan.indirection.depth, n)
     specs: list[LevelSpec] = []
     cap = m
     tb = term_bound
-    slack = cfg.capacity_slack * slack_mult
     p = plan.p
-    for level in range(cfg.srs_rounds):
+    logp = math.log2(max(p, 2))
+    chase_slack = cfg.capacity_slack * scales.chase
+    gather_slack = cfg.capacity_slack * scales.gather
+    for lp in levels:
+        frac = lp.frac
         r_static = max(cfg.min_rulers_per_pe, int(math.ceil(frac * cap)))
         mail_caps = tuple(
             max(cfg.min_capacity,
-                int(math.ceil(slack * r_static / plan.hop_size(hop))))
+                int(math.ceil(chase_slack * r_static / plan.hop_size(hop))))
             for hop in plan.indirection.hops)
         inbox = sum(plan.hop_size(h) * c
                     for h, c in zip(plan.indirection.hops, mail_caps))
-        queue_cap = int(max(cfg.queue_slack * r_static * slack_mult,
+        queue_cap = int(max(cfg.queue_slack * r_static * scales.chase,
                             2 * inbox + cfg.spawn_window + 64))
-        max_rounds = int(cfg.max_round_slack * (1.0 / frac) + 256)
+        # rounds ~ n/r + log p (DESIGN.md §2); 1/frac is the per-PE n/r.
+        max_rounds = int(cfg.max_round_slack * (1.0 / frac + logp) + 256)
         exp_sub = r_static * (1.0 + math.log(max(1.0 / frac, 2.0))) + tb + 64
-        cap_sub = min(cap, int(math.ceil(cfg.sub_capacity_slack * slack_mult
+        cap_sub = min(cap, int(math.ceil(cfg.sub_capacity_slack * scales.sub
                                          * exp_sub)))
         gcap = tuple(
             max(cfg.min_capacity,
-                int(math.ceil(slack * cap / plan.hop_size(hop))))
+                int(math.ceil(gather_slack * cap / plan.hop_size(hop))))
             for hop in plan.indirection.hops)
         specs.append(LevelSpec(
             cap=cap, r_static=r_static, mail_caps=mail_caps,
             queue_cap=queue_cap, spawn_window=cfg.spawn_window,
             max_rounds=max_rounds, cap_sub=cap_sub,
-            gather_req_cap=gcap, gather_resp_cap=gcap, base=False))
+            gather_req_cap=gcap, gather_resp_cap=gcap, base=False,
+            ruler_frac=frac, max_restarts=cfg.max_restarts))
         cap = cap_sub
         tb = cap_sub  # every sub element may be a sub-terminal
     # base level (pointer doubling or all-gather)
     gcap = tuple(
         max(cfg.min_capacity,
-            int(math.ceil(slack * cap / plan.hop_size(hop))))
+            int(math.ceil(gather_slack * cap / plan.hop_size(hop))))
         for hop in plan.indirection.hops)
     specs.append(LevelSpec(
         cap=cap, r_static=0, mail_caps=(0,) * plan.indirection.depth,
         queue_cap=0, spawn_window=0,
         max_rounds=int(math.ceil(math.log2(max(n, 2)))) + 8, cap_sub=0,
-        gather_req_cap=gcap, gather_resp_cap=gcap, base=True))
+        gather_req_cap=gcap, gather_resp_cap=gcap, base=True,
+        ruler_frac=0.0, max_restarts=cfg.max_restarts))
     return tuple(specs)
 
 
@@ -283,14 +301,21 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
     """
     cfg = cfg or ListRankConfig()
     pe_axes = tuple(pe_axes) if pe_axes is not None else tuple(mesh.axis_names)
+    n = succ.shape[0]
+    if indirection is None and cfg.auto_indirection:
+        axis_sizes = tuple(mesh.shape[a] for a in pe_axes)
+        indirection = tuner.choose_indirection(cfg, pe_axes, axis_sizes, n)
     plan = MeshPlan.from_mesh(mesh, pe_axes, indirection,
                               wire_packing=cfg.wire_packing,
                               pallas_pack=cfg.use_pallas_pack)
     p = plan.p
-    n = succ.shape[0]
     if n % p != 0:
         raise ValueError(f"n={n} must be divisible by p={p} (pad the input)")
     m = n // p
+    if cfg.algorithm == "auto":
+        # Corollary-1 regime check: PD below the efficiency threshold.
+        cfg = cfg.with_(algorithm=tuner.choose_algorithm(
+            cfg, p, plan.indirection.depth, m))
     if term_bound is None:
         s = np.asarray(jax.device_get(succ))
         owners = np.arange(n) // m
@@ -301,10 +326,10 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
     succ_d = jax.device_put(jnp.asarray(succ, jnp.int32), sharding)
     rank_d = jax.device_put(jnp.asarray(rank), sharding)
 
-    slack_mult = 1.0
+    scales = tuner.CapacityScales()
     last_stats = None
     for attempt in range(max_retries + 1):
-        specs = build_specs(cfg, plan, m, n, term_bound, slack_mult)
+        specs = build_specs(cfg, plan, m, n, term_bound, scales)
         solver = _jitted_solver(mesh, plan, cfg, specs, m)
         succ_f, rank_f, stats = solver(succ_d, rank_d, jnp.int32(seed))
         host_stats = {k: int(jax.device_get(v)) for k, v in stats.items()}
@@ -313,7 +338,9 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
         if fatal == 0:
             return succ_f, rank_f, host_stats
         last_stats = host_stats
-        slack_mult *= 2.0
+        # targeted retry: rescale only the capacity family whose fatal
+        # stat fired (tuner.FAMILY_OF), not every capacity.
+        scales = tuner.escalate(scales, host_stats)
     raise RuntimeError(
         f"list ranking did not complete after {max_retries + 1} attempts; "
         f"stats={last_stats}")

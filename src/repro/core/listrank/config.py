@@ -4,6 +4,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Literal, Sequence
 
+from repro.core.listrank.analysis import SUPERMUC, MachineModel
+
 
 @dataclasses.dataclass(frozen=True)
 class IndirectionSpec:
@@ -54,14 +56,24 @@ class ListRankConfig:
     base case after ``srs_rounds`` rounds of SRS.
     """
 
-    algorithm: Literal["srs", "doubling"] = "srs"
+    #: ``"auto"`` resolves via the Corollary-1 regime check
+    #: (tuner.choose_algorithm): SRS when n/p clears
+    #: analysis.efficiency_threshold, plain pointer doubling below it.
+    algorithm: Literal["srs", "doubling", "auto"] = "srs"
     #: number of recursive SRS rounds before the base case (paper uses 2).
     srs_rounds: int = 2
     base_case: Literal["doubling", "allgather"] = "doubling"
 
     #: rulers per PE as a fraction of the (effective) local input size.
-    #: ``None`` derives r* from the cost model (analysis.r_star).
+    #: ``None`` derives per-level r* from the cost model
+    #: (tuner.level_plan on top of analysis.r_star).
     ruler_fraction: float | None = 1.0 / 32.0
+    #: machine constants (alpha/beta) for every cost-model decision.
+    machine: MachineModel = SUPERMUC
+    #: when no explicit IndirectionSpec is passed to rank_list, let the
+    #: cost model pick direct vs grid vs topology-aware routing
+    #: (tuner.choose_indirection). False keeps the direct default.
+    auto_indirection: bool = False
     #: hard floor on the per-PE ruler count.
     min_rulers_per_pe: int = 4
 

@@ -1,7 +1,10 @@
 """Input-instance generators (paper §3, Input Instances).
 
 All generators return ``(succ, rank)`` numpy arrays over ``n`` elements,
-with terminals pointing to themselves and carrying weight 0.
+with terminals pointing to themselves and carrying weight 0. All are
+fully vectorized (paper-scale instances, n >= 10^7, build in seconds);
+``tests/test_instances.py`` keeps the original loop implementations as
+the equality oracle.
 
 - :func:`gen_list`: the paper's List(n/p, gamma) — an identity chain
   with a gamma-fraction of labels randomly permuted. gamma=0 gives each
@@ -30,21 +33,22 @@ def gen_list(n: int, gamma: float, seed: int = 0, num_lists: int = 1):
     """
     if not 0.0 <= gamma <= 1.0:
         raise ValueError("gamma must be in [0,1]")
+    if n == 0:
+        return np.zeros(0, np.int32), np.zeros(0, np.int32)
     rng = np.random.default_rng(seed)
     labels = np.arange(n, dtype=np.int64)
     k = int(round(gamma * n))
     if k > 1:
         pos = rng.choice(n, size=k, replace=False)
         labels[pos] = labels[rng.permutation(pos)]
-    # chain over labels: labels[j] -> labels[j+1]
+    # chain over labels: labels[j] -> labels[j+1], self-loop at cuts
     succ = np.empty(n, dtype=np.int64)
+    succ[labels[:-1]] = labels[1:]
+    succ[labels[-1]] = labels[-1]
     cuts = np.linspace(0, n, num_lists + 1).astype(np.int64)[1:]
-    ends = set((cuts - 1).tolist())
-    for j in range(n):
-        if j in ends or j == n - 1:
-            succ[labels[j]] = labels[j]
-        else:
-            succ[labels[j]] = labels[j + 1]
+    ends = cuts - 1
+    ends = ends[(ends >= 0) & (ends < n)]
+    succ[labels[ends]] = labels[ends]
     idx = np.arange(n)
     rank = (succ != idx).astype(np.int64)
     return _as_succ_dtype(succ), rank.astype(np.int32)
@@ -57,10 +61,10 @@ def gen_random_lists(n: int, num_lists: int, seed: int = 0, weighted: bool = Fal
     succ = np.empty(n, dtype=np.int64)
     cuts = np.sort(rng.choice(np.arange(1, n), size=num_lists - 1, replace=False)) if num_lists > 1 else np.array([], dtype=np.int64)
     bounds = np.concatenate([[0], cuts, [n]])
-    for a, b in zip(bounds[:-1], bounds[1:]):
-        seg = perm[a:b]
-        succ[seg[:-1]] = seg[1:]
-        succ[seg[-1]] = seg[-1]
+    # chain the whole permutation, then self-loop every segment end
+    succ[perm[:-1]] = perm[1:]
+    seg_ends = perm[bounds[1:].astype(np.int64) - 1]
+    succ[seg_ends] = seg_ends
     idx = np.arange(n)
     if weighted:
         rank = rng.integers(0, 100, size=n).astype(np.int64)
@@ -104,37 +108,42 @@ def gen_euler_tour(n_nodes: int, seed: int = 0, locality: bool = False):
     n_arcs = 2 * (n_nodes - 1)
     if n_arcs == 0:
         return np.zeros(0, np.int32), np.zeros(0, np.int32), np.zeros((0, 2), np.int64)
-    # children sorted by child id define the adjacency order at each node.
-    order = np.argsort(parent[1:], kind="stable")  # children grouped by parent
-    children: list[list[int]] = [[] for _ in range(n_nodes)]
-    for c in (order + 1):
-        children[parent[c]].append(int(c))
+    # children sorted by child id define the adjacency order at each
+    # node: a stable argsort of the parent array groups children by
+    # parent (ascending child id within each group), so each node's
+    # adjacency list is one contiguous run of ``childs``.
+    order = np.argsort(parent[1:], kind="stable")
+    childs = (order + 1).astype(np.int64)
+    cpar = parent[childs]
+    first_child = np.full(n_nodes, -1, dtype=np.int64)
+    next_sib = np.full(n_nodes, -1, dtype=np.int64)
+    is_first = np.ones(childs.size, dtype=bool)
+    is_first[1:] = cpar[1:] != cpar[:-1]
+    first_child[cpar[is_first]] = childs[is_first]
+    same = cpar[1:] == cpar[:-1]
+    next_sib[childs[:-1][same]] = childs[1:][same]
 
     # next arc after entering node v via arc a: standard Euler tour:
     #   after down-arc (q->c): first child arc of c, else up-arc (c->q)
     #   after up-arc (c->q): next sibling down-arc, else up-arc (q->pq)
-    def down_id(c): return 2 * (c - 1)
-    def up_id(c): return 2 * (c - 1) + 1
-
+    c = np.arange(1, n_nodes, dtype=np.int64)
+    down = 2 * (c - 1)
+    up = down + 1
+    q = parent[c]
+    fc = first_child[c]
+    ns = next_sib[c]
     succ = np.empty(n_arcs, dtype=np.int64)
-    for c in range(1, n_nodes):
-        ch = children[c]
-        succ[down_id(c)] = down_id(ch[0]) if ch else up_id(c)
-        q = parent[c]
-        sibs = children[q]
-        j = sibs.index(c)
-        if j + 1 < len(sibs):
-            succ[up_id(c)] = down_id(sibs[j + 1])
-        elif q == 0:
-            succ[up_id(c)] = up_id(c)  # tour ends back at the root
-        else:
-            succ[up_id(c)] = up_id(q)
+    succ[down] = np.where(fc >= 0, 2 * (fc - 1), up)
+    succ[up] = np.where(ns >= 0, 2 * (ns - 1),
+                        np.where(q == 0, up,  # tour ends back at the root
+                                 2 * (q - 1) + 1))
     idx = np.arange(n_arcs)
     rank = (succ != idx).astype(np.int64)
     arcs = np.empty((n_arcs, 2), dtype=np.int64)
-    for c in range(1, n_nodes):
-        arcs[down_id(c)] = (parent[c], c)
-        arcs[up_id(c)] = (c, parent[c])
+    arcs[down, 0] = q
+    arcs[down, 1] = c
+    arcs[up, 0] = c
+    arcs[up, 1] = q
     return _as_succ_dtype(succ), rank.astype(np.int32), arcs
 
 

@@ -51,6 +51,11 @@ class LevelSpec:
     gather_req_cap: int
     gather_resp_cap: int
     base: bool                    # True => solve with the base case
+    #: ruler fraction of the live instance (tuner.level_plan — the same
+    #: derivation that sized r_static, so r_target <= r_static).
+    ruler_frac: float
+    #: bound on outer chase restarts (ListRankConfig.max_restarts).
+    max_restarts: int
 
 
 def zero_stats():
@@ -285,7 +290,7 @@ def _chase(plan: MeshPlan, spec: LevelSpec, owner_of, st, visited, is_ruler,
                         plan.pe_axes)
 
     def r_cond(c):
-        return (c[1] > 0) & (c[2] < 4)
+        return (c[1] > 0) & (c[2] < spec.max_restarts)
 
     def r_body(c):
         carry, _, restarts = c
@@ -433,10 +438,13 @@ def solve_store(plan: MeshPlan, cfg: ListRankConfig, specs: list[LevelSpec],
     perm = jnp.concatenate(
         [perm, jnp.full((spec.spawn_window,), cap, jnp.int32)])
 
+    # ruler target: the level's tuned fraction of the live instance,
+    # clipped to the static bound derived from the same fraction
+    # (spec.ruler_frac comes from tuner.level_plan via build_specs —
+    # there is no separate fallback here).
     n_active = jnp.sum(st.valid).astype(jnp.int32)
-    frac = cfg.ruler_fraction if cfg.ruler_fraction is not None else 1.0 / 32.0
     r_target = jnp.maximum(jnp.int32(cfg.min_rulers_per_pe),
-                           (frac * n_active).astype(jnp.int32))
+                           (spec.ruler_frac * n_active).astype(jnp.int32))
     r_target = jnp.minimum(r_target, jnp.int32(spec.r_static))
 
     st, is_sub, stats = _chase(plan, spec, owner_of, st, visited, is_ruler,

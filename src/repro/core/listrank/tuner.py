@@ -1,0 +1,207 @@
+"""Host-side parameter engine: the §2.6 cost model drives the solver.
+
+The paper's engineering contribution beyond Sibeyn's algorithm is the
+detailed parameter analysis (Observation 1 / Corollary 1) used to pick
+the ruler count r, the indirection depth d, and the capacities. This
+module turns :mod:`repro.core.listrank.analysis` into the single source
+of truth for those choices:
+
+- :func:`level_plan` — per-recursion-level ruler fractions. With
+  ``ListRankConfig.ruler_fraction=None`` each level's r comes from
+  ``analysis.r_star`` applied to the *expected* instance size entering
+  that level (``analysis.expected_subproblem`` shrinks it level by
+  level); a fixed fraction is passed through unchanged. ``api.build_specs``
+  sizes every capacity from this plan, and the fraction is carried into
+  ``LevelSpec.ruler_frac`` so the in-program ruler target in
+  ``srs.solve_store`` shares the exact same derivation (the dynamic
+  ``r_target`` can therefore never exceed the static ``r_static``).
+
+- :func:`choose_indirection` / :func:`choose_algorithm` — cost-model
+  selection of the routing scheme (direct vs grid vs topology-aware,
+  via :func:`analysis.t_hops` with intra-node constants for the
+  topology hop) and the Corollary-1 regime check that falls back to
+  plain pointer doubling when n/p is below
+  ``analysis.efficiency_threshold``.
+
+- :class:`CapacityScales` / :func:`escalate` — **targeted** capacity
+  retries. Each fatal stat names the capacity family that overflowed
+  (``dropped`` → chase mail/queue, ``sub_overflow`` → the recursion
+  sub-store, ``undelivered`` → gather request/response); a retry
+  doubles only that family instead of every capacity, bounding both the
+  memory blowup and the number of recompiles.
+
+Everything here is host-side python on static quantities — nothing is
+traced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core.listrank import analysis
+from repro.core.listrank.config import IndirectionSpec, ListRankConfig
+
+#: hard cap on the per-level ruler fraction: r*/n can exceed 1 for
+#: small instances (r* is an asymptotic optimum); capping at 1/4 keeps
+#: the expected subproblem r·ln(n/r) strictly shrinking (factor ≈ 0.35).
+RULER_FRAC_CAP = 0.25
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelParams:
+    """Cost-model output for one recursion level (host-side)."""
+    frac: float        #: ruler fraction of the live instance
+    n_expected: int    #: expected global instance size entering the level
+    r_total: int       #: modeled global ruler count
+
+
+def level_plan(cfg: ListRankConfig, p: int, d: int,
+               n: int) -> tuple[LevelParams, ...]:
+    """Per-level ruler fractions for ``srs_rounds`` levels.
+
+    The single shared derivation behind both ``api.build_specs``
+    (capacity sizing) and ``srs.solve_store`` (the runtime ruler
+    target, via ``LevelSpec.ruler_frac``).
+    """
+    out: list[LevelParams] = []
+    n_level = max(int(n), 1)
+    for _ in range(cfg.srs_rounds):
+        if cfg.ruler_fraction is not None:
+            # fixed fraction: passed through exactly (legacy behavior)
+            frac = min(cfg.ruler_fraction, 1.0)
+            r_tot = max(int(math.ceil(frac * n_level)), 1)
+        else:
+            floor_r = max(cfg.min_rulers_per_pe * p, 1)
+            cap_r = max(int(math.ceil(RULER_FRAC_CAP * n_level)), 1)
+            r_tot = analysis.r_star(n_level, p, d, cfg.machine)
+            r_tot = min(max(r_tot, floor_r), max(cap_r, floor_r))
+            frac = min(r_tot / n_level, 1.0)
+        out.append(LevelParams(frac=frac, n_expected=n_level, r_total=r_tot))
+        n_level = max(int(math.ceil(
+            analysis.expected_subproblem(n_level, min(r_tot, n_level)))), 1)
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# indirection / algorithm selection
+# --------------------------------------------------------------------------
+
+def _hop_models(cfg: ListRankConfig, spec: IndirectionSpec,
+                intra_hop: tuple[str, ...] | None):
+    """Machine model per hop: intra-node constants for the designated
+    intra-node hop of a topology-aware spec, ``cfg.machine`` otherwise."""
+    return tuple(analysis.INTRA_NODE if hop == intra_hop else cfg.machine
+                 for hop in spec.hops)
+
+
+def candidate_indirections(pe_axes: Sequence[str], axis_sizes: Sequence[int]):
+    """The routing schemes the mesh shape admits, as
+    ``(name, spec, intra_hop)`` triples. Size-1 axes are excluded from
+    grid/topology hops — a hop over a one-PE group is a real collective
+    that moves nothing (coordinate 0 needs no fixing). Topology-aware
+    treats the minor (fastest-varying) non-trivial axis as intra-node,
+    matching how production meshes map PEs onto pod factors
+    (launch/mesh.py)."""
+    pe_axes = tuple(pe_axes)
+    cands = [("direct", IndirectionSpec.direct(pe_axes), None)]
+    multi = tuple(a for a, s in zip(pe_axes, axis_sizes) if s > 1)
+    if len(multi) > 1:
+        grid = IndirectionSpec(hops=tuple((a,) for a in reversed(multi)))
+        cands.append(("grid", grid, None))
+        intra, inter = (multi[-1],), tuple(multi[:-1])
+        cands.append(("topology",
+                      IndirectionSpec.topology(intra, inter), intra))
+    return cands
+
+
+def choose_indirection(cfg: ListRankConfig, pe_axes: Sequence[str],
+                       axis_sizes: Sequence[int], n: int) -> IndirectionSpec:
+    """Pick the indirection scheme with the lowest modeled time.
+
+    Each candidate is scored with its own r* (deeper indirection shifts
+    the alpha/beta balance, so the optimal r moves with it)."""
+    p = math.prod(axis_sizes)
+    best, best_t = None, float("inf")
+    for _, spec, intra_hop in candidate_indirections(pe_axes, axis_sizes):
+        hop_sizes = tuple(
+            math.prod(axis_sizes[list(pe_axes).index(a)] for a in hop)
+            for hop in spec.hops)
+        models = _hop_models(cfg, spec, intra_hop)
+        r = analysis.r_star(n, p, spec.depth, cfg.machine)
+        t = analysis.t_hops(n, p, r, hop_sizes, models)
+        if t < best_t:
+            best, best_t = spec, t
+    return best
+
+
+def choose_algorithm(cfg: ListRankConfig, p: int, d: int, m: int) -> str:
+    """Resolve ``algorithm="auto"``: SRS in the Corollary-1 efficient
+    regime, plain pointer doubling below it (n/p too small for the
+    chase's alpha terms to amortize)."""
+    if cfg.algorithm != "auto":
+        return cfg.algorithm
+    thr = analysis.efficiency_threshold(p, d, cfg.machine)
+    return "doubling" if m < thr else "srs"
+
+
+# --------------------------------------------------------------------------
+# targeted capacity retries
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CapacityScales:
+    """Per-family capacity multipliers for the retry loop.
+
+    ``chase`` scales the chase-phase mailbox and queue capacities,
+    ``sub`` the recursion sub-store, ``gather`` the remote-gather
+    request/response mailboxes. All 1.0 on the first attempt.
+    """
+    chase: float = 1.0
+    sub: float = 1.0
+    gather: float = 1.0
+
+
+#: fatal stat -> the capacity families whose overflow it signals.
+#: ``store_miss`` has no capacity interpretation (it indicates routing
+#: to the wrong owner), so it conservatively rescales everything.
+FAMILY_OF = {
+    "dropped": ("chase",),
+    "sub_overflow": ("sub",),
+    "undelivered": ("gather",),
+    "store_miss": ("chase", "sub", "gather"),
+}
+
+_ALL_FAMILIES = ("chase", "sub", "gather")
+
+#: stats that are NOT capacity-exclusive: ``undelivered`` also captures
+#: chase coverage failures (restart-loop stragglers) and chase-mailbox
+#: ``route_until_done`` pendings, which no amount of gather capacity
+#: fixes. The exclusive stats (dropped, sub_overflow) always make
+#: progress by re-doubling their own family.
+AMBIGUOUS_STATS = ("undelivered",)
+
+
+def escalate(scales: CapacityScales, stats: dict,
+             factor: float = 2.0) -> CapacityScales:
+    """Rescale only the capacity families implicated by the fatal stats
+    in ``stats`` (global rescale if none of the known keys fired).
+
+    Widening ladder for the ambiguous stats only: when an
+    ``AMBIGUOUS_STATS`` key persists after its own family was already
+    rescaled, its mapping was evidently not the bottleneck, so that
+    retry widens to a global rescale. Capacity-exclusive stats keep
+    re-doubling their own family however often they fire — targeting
+    is never permanently degraded."""
+    bump = set()
+    widen = False
+    for key, fams in FAMILY_OF.items():
+        if stats.get(key, 0) > 0:
+            bump.update(fams)
+            if key in AMBIGUOUS_STATS and \
+                    all(getattr(scales, f) > 1.0 for f in fams):
+                widen = True
+    if not bump or widen:
+        bump = set(_ALL_FAMILIES)
+    return dataclasses.replace(
+        scales, **{f: getattr(scales, f) * factor for f in bump})

@@ -1,0 +1,159 @@
+"""Oracle tests for the vectorized instance generators.
+
+The generators in ``instances.py`` were rewritten from O(n) Python
+loops (with per-element ``set``/``list.index`` lookups) to vectorized
+numpy so paper-scale instances (>= 10^7 elements) are practical. The
+original loop implementations are kept *here* as the reference oracle:
+for small n and a fixed seed the vectorized output must be identical
+bit for bit (both consume the identical RNG stream).
+"""
+import numpy as np
+import pytest
+
+from repro.core.listrank import instances
+
+
+# --------------------------------------------------------------------------
+# reference (seed) implementations — the pre-vectorization loop code
+# --------------------------------------------------------------------------
+
+def ref_gen_list(n, gamma, seed=0, num_lists=1):
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n, dtype=np.int64)
+    k = int(round(gamma * n))
+    if k > 1:
+        pos = rng.choice(n, size=k, replace=False)
+        labels[pos] = labels[rng.permutation(pos)]
+    succ = np.empty(n, dtype=np.int64)
+    cuts = np.linspace(0, n, num_lists + 1).astype(np.int64)[1:]
+    ends = set((cuts - 1).tolist())
+    for j in range(n):
+        if j in ends or j == n - 1:
+            succ[labels[j]] = labels[j]
+        else:
+            succ[labels[j]] = labels[j + 1]
+    idx = np.arange(n)
+    rank = (succ != idx).astype(np.int64)
+    return succ.astype(np.int32), rank.astype(np.int32)
+
+
+def ref_gen_random_lists(n, num_lists, seed=0, weighted=False):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    succ = np.empty(n, dtype=np.int64)
+    cuts = (np.sort(rng.choice(np.arange(1, n), size=num_lists - 1,
+                               replace=False))
+            if num_lists > 1 else np.array([], dtype=np.int64))
+    bounds = np.concatenate([[0], cuts, [n]])
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        seg = perm[a:b]
+        succ[seg[:-1]] = seg[1:]
+        succ[seg[-1]] = seg[-1]
+    idx = np.arange(n)
+    if weighted:
+        rank = rng.integers(0, 100, size=n).astype(np.int64)
+        rank[succ == idx] = 0
+    else:
+        rank = (succ != idx).astype(np.int64)
+    return succ.astype(np.int32), rank.astype(np.int32)
+
+
+def ref_gen_euler_tour(n_nodes, seed=0, locality=False):
+    rng = np.random.default_rng(seed)
+    parent = instances._random_tree_parents(n_nodes, rng, locality)
+    n_arcs = 2 * (n_nodes - 1)
+    if n_arcs == 0:
+        return (np.zeros(0, np.int32), np.zeros(0, np.int32),
+                np.zeros((0, 2), np.int64))
+    order = np.argsort(parent[1:], kind="stable")
+    children = [[] for _ in range(n_nodes)]
+    for c in (order + 1):
+        children[parent[c]].append(int(c))
+
+    def down_id(c):
+        return 2 * (c - 1)
+
+    def up_id(c):
+        return 2 * (c - 1) + 1
+
+    succ = np.empty(n_arcs, dtype=np.int64)
+    for c in range(1, n_nodes):
+        ch = children[c]
+        succ[down_id(c)] = down_id(ch[0]) if ch else up_id(c)
+        q = parent[c]
+        sibs = children[q]
+        j = sibs.index(c)
+        if j + 1 < len(sibs):
+            succ[up_id(c)] = down_id(sibs[j + 1])
+        elif q == 0:
+            succ[up_id(c)] = up_id(c)
+        else:
+            succ[up_id(c)] = up_id(q)
+    idx = np.arange(n_arcs)
+    rank = (succ != idx).astype(np.int64)
+    arcs = np.empty((n_arcs, 2), dtype=np.int64)
+    for c in range(1, n_nodes):
+        arcs[down_id(c)] = (parent[c], c)
+        arcs[up_id(c)] = (c, parent[c])
+    return succ.astype(np.int32), rank.astype(np.int32), arcs
+
+
+# --------------------------------------------------------------------------
+# oracle equality
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,gamma,num_lists,seed", [
+    (1, 0.0, 1, 0), (2, 1.0, 1, 1), (17, 0.5, 1, 2), (64, 0.0, 1, 3),
+    (64, 1.0, 1, 4), (128, 0.3, 5, 5), (100, 1.0, 7, 6), (5, 1.0, 5, 7),
+    (256, 0.9, 3, 8),
+])
+def test_gen_list_matches_loop_reference(n, gamma, num_lists, seed):
+    s_ref, r_ref = ref_gen_list(n, gamma, seed=seed, num_lists=num_lists)
+    s, r = instances.gen_list(n, gamma, seed=seed, num_lists=num_lists)
+    np.testing.assert_array_equal(s, s_ref)
+    np.testing.assert_array_equal(r, r_ref)
+
+
+@pytest.mark.parametrize("n,num_lists,weighted,seed", [
+    (1, 1, False, 0), (2, 2, False, 1), (64, 1, False, 2),
+    (64, 9, True, 3), (128, 17, True, 4), (200, 2, False, 5),
+])
+def test_gen_random_lists_matches_loop_reference(n, num_lists, weighted,
+                                                 seed):
+    s_ref, r_ref = ref_gen_random_lists(n, num_lists, seed=seed,
+                                        weighted=weighted)
+    s, r = instances.gen_random_lists(n, num_lists, seed=seed,
+                                      weighted=weighted)
+    np.testing.assert_array_equal(s, s_ref)
+    np.testing.assert_array_equal(r, r_ref)
+
+
+@pytest.mark.parametrize("n_nodes,locality,seed", [
+    (1, False, 0), (2, False, 1), (3, True, 2), (50, False, 3),
+    (50, True, 4), (173, False, 5), (173, True, 6), (400, True, 7),
+])
+def test_gen_euler_tour_matches_loop_reference(n_nodes, locality, seed):
+    s_ref, r_ref, a_ref = ref_gen_euler_tour(n_nodes, seed=seed,
+                                             locality=locality)
+    s, r, a = instances.gen_euler_tour(n_nodes, seed=seed, locality=locality)
+    np.testing.assert_array_equal(s, s_ref)
+    np.testing.assert_array_equal(r, r_ref)
+    np.testing.assert_array_equal(a, a_ref)
+
+
+# --------------------------------------------------------------------------
+# structural sanity at a size the loop version could not handle quickly
+# --------------------------------------------------------------------------
+
+def test_generators_scale():
+    n = 1 << 20
+    s, r = instances.gen_list(n, gamma=1.0, seed=0)
+    assert s.shape == (n,) and np.sum(s == np.arange(n)) == 1
+    s, r = instances.gen_random_lists(n, num_lists=64, seed=1)
+    assert np.sum(s == np.arange(n)) == 64
+    s, r, arcs = instances.gen_euler_tour(n // 4, seed=2, locality=True)
+    n_arcs = 2 * (n // 4 - 1)
+    assert s.shape == (n_arcs,) and arcs.shape == (n_arcs, 2)
+    # the tour visits every arc exactly once: ranks on the single list
+    # reaching the root-return arc form a permutation prefix
+    assert np.sum(s == np.arange(n_arcs)) == 1

@@ -41,6 +41,9 @@ VARIANTS = {
     "unpacked_srs2": BASE.with_(srs_rounds=2, local_contraction=True,
                                 wire_packing=False),
     "pallas_pack": BASE.with_(use_pallas_pack=True),
+    "auto_tuned": BASE.with_(ruler_fraction=None),
+    "auto_tuned_srs2": BASE.with_(ruler_fraction=None, srs_rounds=2,
+                                  local_contraction=True),
 }
 
 
