@@ -3,6 +3,8 @@
   fig2_locality    Fig 2: locality-aware techniques vs gamma
   fig3_scaling     Fig 3: weak scaling, SRS vs PD, +/- indirection
   fig4_indirection Fig 4: indirection schemes + phase breakdown
+  treealg_bench    Euler-tour tree statistics per tree family + the
+                   batched multi-instance front door
   roofline         the (arch x shape) roofline table from the dry-run
                    artifacts (see repro.launch.dryrun)
 
@@ -145,6 +147,24 @@ def exchange_micro() -> list[dict]:
     return json.loads(f.read_text()) if f.exists() else []
 
 
+def treealg_bench() -> list[dict]:
+    """Tree-statistics + batched-front-door benchmark (fixed virtual-
+    device count => subprocess), re-emits its CSV rows."""
+    proc = subprocess.run([sys.executable, str(HERE / "treealg_bench.py")],
+                          capture_output=True, text=True, timeout=3600)
+    for line in proc.stdout.splitlines():
+        if line.startswith("treealg/"):
+            print(line)
+    if proc.returncode != 0:
+        print(f"treealg/error,0,rc={proc.returncode}")
+        print(proc.stderr[-1000:])
+        return []
+    # quick mode writes its own artifact (the committed treealg.json is
+    # full-mode only and must not be mistaken for this run's data)
+    f = RESULTS / ("treealg_quick.json" if QUICK else "treealg.json")
+    return json.loads(f.read_text()) if f.exists() else []
+
+
 def roofline() -> list[dict]:
     """Aggregate the dry-run JSON artifacts into the roofline table."""
     rows = []
@@ -174,6 +194,7 @@ def main() -> None:
     out["fig2_locality"] = fig2_locality()
     out["fig3_scaling"] = fig3_scaling()
     out["fig4_indirection"] = fig4_indirection()
+    out["treealg"] = treealg_bench()
     out["roofline"] = roofline()
     (RESULTS / "benchmarks.json").write_text(json.dumps(out, indent=1))
     print(f"# wrote {RESULTS / 'benchmarks.json'}")

@@ -11,6 +11,11 @@ from repro.core.listrank.api import rank_list, rank_list_with_stats
 from repro.core.listrank.sequential import rank_list_seq
 from repro.core.listrank import instances, analysis, tuner
 
+#: batched multi-instance front door (lives in repro.core.treealg.batch,
+#: re-exported here because it is the list-level serving API). Lazy to
+#: keep the import graph acyclic: treealg imports listrank submodules.
+_TREEALG_EXPORTS = ("rank_lists", "rank_lists_with_stats", "solve_forest")
+
 __all__ = [
     "ListRankConfig",
     "IndirectionSpec",
@@ -20,4 +25,13 @@ __all__ = [
     "instances",
     "analysis",
     "tuner",
+    *_TREEALG_EXPORTS,
 ]
+
+
+def __getattr__(name):
+    if name in _TREEALG_EXPORTS:
+        from repro.core.treealg import batch
+        return getattr(batch, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -45,16 +45,45 @@ from repro.core.listrank.srs import (LevelSpec, gather_until_done,
 FATAL_KEYS = ("dropped", "sub_overflow", "store_miss", "undelivered")
 
 
-#: structure of a chase wave message. Width is what matters here —
-#: every leaf is one 32-bit word on the wire regardless of its runtime
-#: dtype (weight may be int32 or float32; both bit-pack to one word).
-CHASE_LEAVES = {"target": jnp.int32, "ruler": jnp.int32, "weight": jnp.float32}
+def chase_leaves(weight_dtype=jnp.float32) -> dict:
+    """Structure of a chase wave message for a given weight dtype.
 
-#: int32 words per chase message on the wire (payload leaves + routing
-#: destination + validity) — the WireFormat descriptor derived
-#: host-side; the benchmark harness uses it for modeled comm volume.
-CHASE_WIRE_WORDS = exchange_lib.WireFormat.for_leaves(
-    {**CHASE_LEAVES, "_dest": jnp.int32}).width
+    The weight leaf rides as whatever dtype the caller's rank array
+    carries (int32 for the ±1 Euler-tour weights of
+    ``repro.core.treealg``, float32 for float instances); the wire
+    format bit-reinterprets it, so e.g. int32 ±1 weights round-trip
+    exactly — no float detour anywhere in the solver.
+    """
+    return {"target": jnp.int32, "ruler": jnp.int32,
+            "weight": jnp.dtype(weight_dtype)}
+
+
+def chase_wire_words(weight_dtype=jnp.float32) -> int:
+    """int32 words per chase message on the wire (payload leaves +
+    routing destination + validity) — the WireFormat descriptor derived
+    host-side; the benchmark harness uses it for modeled comm volume.
+    Every supported weight dtype packs to one 32-bit word, so the width
+    is dtype-independent."""
+    return exchange_lib.WireFormat.for_leaves(
+        {**chase_leaves(weight_dtype), "_dest": jnp.int32}).width
+
+
+#: the default-dtype descriptors (kept as module constants for the
+#: benchmark harnesses' modeled-volume computations).
+CHASE_LEAVES = chase_leaves()
+CHASE_WIRE_WORDS = chase_wire_words()
+
+
+def canonical_weight_dtype(dtype) -> jnp.dtype:
+    """The on-device dtype for a rank/weight input: 32-bit words,
+    integer kinds to int32, float kinds to float32 (bool weights make
+    no sense and are rejected)."""
+    dt = jnp.dtype(dtype)
+    if jnp.issubdtype(dt, jnp.floating):
+        return jnp.dtype(jnp.float32)
+    if jnp.issubdtype(dt, jnp.integer):
+        return jnp.dtype(jnp.int32)
+    raise TypeError(f"unsupported weight dtype {dt}")
 
 
 def build_specs(cfg: ListRankConfig, plan: MeshPlan, m: int, n: int,
@@ -324,7 +353,11 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
 
     sharding = NamedSharding(mesh, P(pe_axes))
     succ_d = jax.device_put(jnp.asarray(succ, jnp.int32), sharding)
-    rank_d = jax.device_put(jnp.asarray(rank), sharding)
+    # explicit weight-dtype canonicalization (chase_leaves): int weights
+    # stay integer end-to-end — ±1 tour weights round-trip exactly.
+    wdt = canonical_weight_dtype(
+        rank.dtype if hasattr(rank, "dtype") else np.asarray(rank).dtype)
+    rank_d = jax.device_put(jnp.asarray(rank, wdt), sharding)
 
     scales = tuner.CapacityScales()
     last_stats = None

@@ -11,9 +11,11 @@ the equality oracle.
   PE a contiguous sublist (perfect locality); gamma=1 a fully random
   permutation (no locality).
 - :func:`gen_random_lists`: a forest of random lists (multi-list case).
-- :func:`gen_euler_tour`: the Euler tour of a random tree; two tree
-  models mimic the paper's GNM (no locality) and RGG2D (high locality)
-  BFS-tree instances.
+- :func:`gen_euler_tour`: the Euler tour of a random tree (or, with
+  ``num_trees``, a forest); two tree models mimic the paper's GNM (no
+  locality) and RGG2D (high locality) BFS-tree instances, and
+  ``weighted=True`` gives the ±1 depth weights consumed by
+  ``repro.core.treealg``.
 """
 from __future__ import annotations
 
@@ -92,54 +94,108 @@ def _random_tree_parents(n: int, rng: np.random.Generator, locality: bool) -> np
     return parent
 
 
-def gen_euler_tour(n_nodes: int, seed: int = 0, locality: bool = False):
-    """Euler tour of a random ``n_nodes`` tree as a list-ranking instance.
-
-    The tour has ``2*(n_nodes-1)`` arcs; arc (u,v) is followed by the
-    next arc around v after (v,u) in the circular adjacency order. The
-    tour is rooted at node 0 by cutting the arc returning to the root.
-
-    Returns (succ, rank, arcs): arcs[i] = (u, v) for tour element i.
-    """
+def gen_tree_parents(n_nodes: int, seed: int = 0, locality: bool = False,
+                     num_trees: int = 1) -> np.ndarray:
+    """A random rooted tree (or ``num_trees`` forest) as a parent array
+    with ``parent[root] == root`` — the input shape of
+    ``repro.core.treealg``. Same tree models as :func:`gen_euler_tour`
+    (which consumes exactly this array: same seed, same tree)."""
     rng = np.random.default_rng(seed)
     parent = _random_tree_parents(n_nodes, rng, locality)
+    if not 1 <= num_trees <= max(n_nodes, 1):
+        raise ValueError("num_trees must be in [1, n_nodes]")
+    if num_trees > 1:
+        # cut the tree into a forest: extra roots detach their subtree.
+        # Drawn after the parent array so the num_trees=1 RNG stream is
+        # unchanged (same backward-compat discipline as gen_list).
+        extra = rng.choice(np.arange(1, n_nodes), size=num_trees - 1,
+                           replace=False)
+        parent[extra] = extra
+    return parent
+
+
+def adjacency_links(parent: np.ndarray):
+    """(first_child, next_sib) per node (−1 = none) under the
+    ascending-child-id adjacency order: a stable argsort of the
+    non-root parent entries groups children by parent with ascending
+    child id inside each run. The single definition of the tour's
+    adjacency order — shared by :func:`gen_euler_tour` and the
+    device-construction oracle ``treealg.euler.oracle_tour``."""
+    n = parent.shape[0]
+    nodes = np.arange(n, dtype=np.int64)
+    cand = nodes[parent != nodes]
+    order = np.argsort(parent[cand], kind="stable")
+    childs = cand[order]
+    cpar = parent[childs]
+    first_child = np.full(n, -1, dtype=np.int64)
+    next_sib = np.full(n, -1, dtype=np.int64)
+    if childs.size:
+        is_first = np.ones(childs.size, dtype=bool)
+        is_first[1:] = cpar[1:] != cpar[:-1]
+        first_child[cpar[is_first]] = childs[is_first]
+        same = cpar[1:] == cpar[:-1]
+        next_sib[childs[:-1][same]] = childs[1:][same]
+    return first_child, next_sib
+
+
+def gen_euler_tour(n_nodes: int, seed: int = 0, locality: bool = False,
+                   weighted: bool = False, num_trees: int = 1):
+    """Euler tour of a random tree (or forest) as a list-ranking instance.
+
+    The tour has one element per arc; arc (u,v) is followed by the next
+    arc around v after (v,u) in the circular adjacency order. Each tree
+    is rooted (node 0, plus ``num_trees - 1`` random extra roots for
+    forests) by cutting the arc returning to its root; roots' own arc
+    slots become weight-0 self-loops, so the layout stays
+    down(c) = 2(c-1), up(c) = 2(c-1)+1 regardless of the forest shape.
+
+    ``weighted=True`` assigns the depth weights: +1 on down-arcs, -1 on
+    up-arcs (terminals and root dummies carry 0 as the solver requires),
+    so a node's depth is recoverable from the weighted rank of its
+    down-arc alone (``treealg.ops``: depth = 2 - rank±(down)).
+
+    Returns (succ, rank, arcs): arcs[i] = (u, v) for tour element i
+    (roots' dummy slots hold (r, r)).
+    """
+    parent = gen_tree_parents(n_nodes, seed=seed, locality=locality,
+                              num_trees=num_trees)
     # arcs: for each non-root node c with parent q: down-arc (q->c) id 2k,
     # up-arc (c->q) id 2k+1 where k = c-1.
     n_arcs = 2 * (n_nodes - 1)
     if n_arcs == 0:
         return np.zeros(0, np.int32), np.zeros(0, np.int32), np.zeros((0, 2), np.int64)
-    # children sorted by child id define the adjacency order at each
-    # node: a stable argsort of the parent array groups children by
-    # parent (ascending child id within each group), so each node's
-    # adjacency list is one contiguous run of ``childs``.
-    order = np.argsort(parent[1:], kind="stable")
-    childs = (order + 1).astype(np.int64)
-    cpar = parent[childs]
-    first_child = np.full(n_nodes, -1, dtype=np.int64)
-    next_sib = np.full(n_nodes, -1, dtype=np.int64)
-    is_first = np.ones(childs.size, dtype=bool)
-    is_first[1:] = cpar[1:] != cpar[:-1]
-    first_child[cpar[is_first]] = childs[is_first]
-    same = cpar[1:] == cpar[:-1]
-    next_sib[childs[:-1][same]] = childs[1:][same]
+    nodes = np.arange(n_nodes, dtype=np.int64)
+    is_root = parent == nodes
+    cand = nodes[~is_root]
+    first_child, next_sib = adjacency_links(parent)
 
     # next arc after entering node v via arc a: standard Euler tour:
     #   after down-arc (q->c): first child arc of c, else up-arc (c->q)
     #   after up-arc (c->q): next sibling down-arc, else up-arc (q->pq)
-    c = np.arange(1, n_nodes, dtype=np.int64)
+    c = cand
     down = 2 * (c - 1)
     up = down + 1
     q = parent[c]
     fc = first_child[c]
     ns = next_sib[c]
+    idx = np.arange(n_arcs)
     succ = np.empty(n_arcs, dtype=np.int64)
+    succ[idx] = idx  # roots' dummy arc slots self-loop
     succ[down] = np.where(fc >= 0, 2 * (fc - 1), up)
     succ[up] = np.where(ns >= 0, 2 * (ns - 1),
-                        np.where(q == 0, up,  # tour ends back at the root
+                        np.where(is_root[q], up,  # tour ends at its root
                                  2 * (q - 1) + 1))
-    idx = np.arange(n_arcs)
-    rank = (succ != idx).astype(np.int64)
+    if weighted:
+        rank = np.where(idx % 2 == 0, 1, -1).astype(np.int64)
+        rank[succ == idx] = 0
+    else:
+        rank = (succ != idx).astype(np.int64)
     arcs = np.empty((n_arcs, 2), dtype=np.int64)
+    r_extra = nodes[1:][is_root[1:]]
+    arcs[2 * (r_extra - 1), 0] = r_extra
+    arcs[2 * (r_extra - 1), 1] = r_extra
+    arcs[2 * (r_extra - 1) + 1, 0] = r_extra
+    arcs[2 * (r_extra - 1) + 1, 1] = r_extra
     arcs[down, 0] = q
     arcs[down, 1] = c
     arcs[up, 0] = c

@@ -1,7 +1,12 @@
-"""Sequential list-ranking oracle (numpy pointer chasing).
+"""Sequential list-ranking oracle (vectorized numpy pointer jumping).
 
 Used as the correctness reference for every distributed algorithm and
-for the Pallas kernels' ``ref.py`` cross-checks.
+for the Pallas kernels' ``ref.py`` cross-checks. The original
+per-terminal Python walk (an O(n) interpreter loop per list) is kept in
+``tests/test_sequential.py`` as the oracle-of-oracles; this vectorized
+version must match it exactly on integer weights and to float tolerance
+on float weights (the accumulation order differs: backward walk vs
+pairwise jumping).
 """
 from __future__ import annotations
 
@@ -9,7 +14,8 @@ import numpy as np
 
 
 def rank_list_seq(succ: np.ndarray, rank: np.ndarray | None = None):
-    """Rank all lists by sequential traversal. O(n) time.
+    """Rank all lists by vectorized pointer jumping. O(n log L) work for
+    maximum list length L, with no Python-level per-element loops.
 
     Args:
       succ: int array of successor indices; terminals satisfy succ[i]==i.
@@ -26,42 +32,32 @@ def rank_list_seq(succ: np.ndarray, rank: np.ndarray | None = None):
     if rank is None:
         rank = (succ != idx).astype(np.int64)
     rank = np.asarray(rank)
-    if not np.all(rank[succ == idx] == 0):
+    is_term = succ == idx
+    if not np.all(rank[is_term] == 0):
         raise ValueError("terminal elements must carry weight 0")
+    # a set of lists has in-degree <= 1 everywhere: merged successors
+    # (trees/rho shapes) must fail loudly — jumping would happily rank
+    # them, and this function is the oracle everything else trusts.
+    targets = succ[~is_term]
+    if np.unique(targets).size != targets.size:
+        raise ValueError(
+            "an element has two predecessors (not a set of lists)")
 
-    succ_out = np.empty_like(succ)
-    rank_out = np.zeros(n, dtype=rank.dtype)
-    # Build predecessor lists to traverse each list from its terminal
-    # backwards without recursion: count in-degrees, then walk.
-    has_pred = np.zeros(n, dtype=bool)
-    nonterm = succ != idx
-    has_pred[succ[nonterm]] = True
-    # predecessor map (each element has at most one predecessor)
-    pred = np.full(n, -1, dtype=np.int64)
-    src = idx[nonterm]
-    pred[succ[nonterm]] = src
-    terminals = idx[succ == idx]
-    for t in terminals:
-        # walk backwards from terminal accumulating distance
-        succ_out[t] = t
-        rank_out[t] = 0
-        cur = pred[t]
-        dist = rank_out[t]
-        prev = t
-        while cur != -1:
-            dist = dist + rank[cur]
-            succ_out[cur] = t
-            rank_out[cur] = dist
-            prev = cur
-            cur = pred[cur]
-    # detect cycles: every element must have been assigned
-    visited = np.zeros(n, dtype=bool)
-    visited[terminals] = True
-    for t in terminals:
-        cur = pred[t]
-        while cur != -1:
-            visited[cur] = True
-            cur = pred[cur]
-    if not visited.all():
+    # Pointer jumping: after k steps s[i] is 2^k links ahead (clamped at
+    # the terminal) and w[i] the weight sum over the links traversed —
+    # terminals are fixed points contributing 0, so both converge to the
+    # answer once 2^k exceeds every list length.
+    s = succ.astype(np.int64)
+    w = rank.copy()
+    for _ in range(max(int(n).bit_length(), 1) + 1):
+        if np.all(is_term[s]):
+            break
+        w = w + w[s]
+        s = s[s]
+    # A set of lists converges within ceil(log2 n)+1 jumps; anything
+    # still short of a true terminal is on a cycle. (Cycles of even
+    # length collapse to spurious fixed points under jumping, so the
+    # check must consult the *original* terminal set.)
+    if not np.all(is_term[s]):
         raise ValueError("input contains a cycle (not a set of lists)")
-    return succ_out, rank_out
+    return s.astype(succ.dtype), w.astype(rank.dtype)

@@ -1,0 +1,30 @@
+"""Euler-tour tree algorithms on top of distributed list ranking.
+
+The paper motivates list ranking by its "many applications as a
+subroutine" — above all Euler-tour tree computations. This package is
+that application layer:
+
+- :mod:`~repro.core.treealg.euler` — device-side tour construction
+  from a sharded parent array (two packed exchange rounds),
+- :mod:`~repro.core.treealg.ops` — ``root_tree``, ``node_depth``,
+  ``subtree_size``, ``preorder``/``postorder`` via closed-form
+  arc-position arithmetic over ranked tours (DESIGN.md §8),
+- :mod:`~repro.core.treealg.batch` — the batched multi-instance front
+  door (``rank_lists`` / ``solve_forest``): B independent instances,
+  one jitted mesh solve.
+"""
+from repro.core.treealg.euler import build_tour, oracle_tour, tour_caps
+from repro.core.treealg.ops import (TreeStats, node_depth, postorder,
+                                    preorder, root_tree, roots_and_sizes,
+                                    subtree_size, tree_stats)
+from repro.core.treealg.batch import (pack_instances, rank_lists,
+                                      rank_lists_with_stats, solve_forest,
+                                      unpack_results)
+
+__all__ = [
+    "build_tour", "oracle_tour", "tour_caps",
+    "TreeStats", "node_depth", "postorder", "preorder", "root_tree",
+    "roots_and_sizes", "subtree_size", "tree_stats",
+    "pack_instances", "rank_lists", "rank_lists_with_stats",
+    "solve_forest", "unpack_results",
+]

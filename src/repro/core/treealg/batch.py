@@ -1,0 +1,140 @@
+"""Batched multi-instance front door (the serving-side scenario).
+
+Many small list-ranking or tree queries must not each pay a solver
+invocation (compile-cache lookup, host round trips, p collective
+startups): :func:`rank_lists` packs B independent instances into ONE
+block-sharded instance — ids offset-relabelled per instance, the tail
+padded with weight-0 singletons (``instances.pad_to_multiple``) — and
+runs a single jitted mesh solve. Lists never cross instance boundaries
+(every id is relabelled into its own offset window), so the per-round
+collective count of the packed solve is *identical* to a
+single-instance solve of the same total size: batching costs volume,
+never startups. ``tests/test_treealg.py`` pins that claim with jaxpr
+collective counts.
+
+:func:`solve_forest` is the tree-level door: B independent trees pack
+into one forest (euler.py handles multi-root inputs natively), one
+device tour build + one batched solve yields every tree's
+:class:`~repro.core.treealg.ops.TreeStats`.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core.listrank import instances
+from repro.core.listrank.api import rank_list_with_stats
+from repro.core.listrank.config import ListRankConfig
+
+
+def pack_instances(batch: Sequence[tuple[np.ndarray, np.ndarray]]):
+    """Offset-relabel and concatenate B (succ, rank) instances.
+
+    Returns (succ, rank, offsets): instance b occupies the id window
+    ``[offsets[b], offsets[b+1])``. Weight dtypes are promoted to their
+    common numpy result type (int stays int32 on the wire, float
+    float32 — see ``api.chase_leaves``).
+    """
+    if not batch:
+        raise ValueError("empty instance batch")
+    sizes = np.array([np.asarray(s).shape[0] for s, _ in batch], np.int64)
+    for b, (s, r) in enumerate(batch):
+        s = np.asarray(s)
+        if np.asarray(r).shape != s.shape:
+            raise ValueError("succ/rank shape mismatch in batch")
+        # ids must stay inside the instance: an out-of-range id would
+        # silently alias into a neighbor's offset window after packing
+        if s.size and not ((s >= 0) & (s < s.shape[0])).all():
+            raise ValueError(f"instance {b}: succ ids out of range")
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    succ = np.concatenate(
+        [np.asarray(s, np.int64) + off
+         for (s, _), off in zip(batch, offsets)]) if sizes.sum() else \
+        np.zeros(0, np.int64)
+    wdt = np.result_type(*[np.asarray(r).dtype for _, r in batch])
+    rank = np.concatenate(
+        [np.asarray(r).astype(wdt) for _, r in batch]) if sizes.sum() else \
+        np.zeros(0, wdt)
+    return succ.astype(np.int32), rank, offsets
+
+
+def unpack_results(succ: np.ndarray, rank: np.ndarray,
+                   offsets: np.ndarray):
+    """Inverse of :func:`pack_instances` on solver output (padding
+    beyond ``offsets[-1]`` is dropped, ids shift back per window)."""
+    out = []
+    for b in range(offsets.shape[0] - 1):
+        lo, hi = int(offsets[b]), int(offsets[b + 1])
+        out.append((succ[lo:hi] - lo, rank[lo:hi]))
+    return out
+
+
+def rank_lists_with_stats(batch, mesh, pe_axes=None,
+                          cfg: ListRankConfig | None = None, **kw):
+    """Rank B independent instances in ONE jitted mesh solve.
+
+    Args:
+      batch: sequence of (succ, rank) pairs (numpy or jax arrays),
+        each a self-contained instance with terminals pointing to
+        themselves.
+
+    Returns:
+      (results, stats): ``results[b]`` is instance b's (succ, rank) in
+      its own id space; ``stats`` the single solve's counters.
+    """
+    batch = [(np.asarray(jax.device_get(s)), np.asarray(jax.device_get(r)))
+             for s, r in batch]
+    succ, rank, offsets = pack_instances(batch)
+    p = 1
+    axes = tuple(pe_axes) if pe_axes is not None else tuple(mesh.axis_names)
+    for a in axes:
+        p *= mesh.shape[a]
+    succ, rank = instances.pad_to_multiple(succ, rank, p)
+    s_out, r_out, stats = rank_list_with_stats(succ, rank, mesh,
+                                               pe_axes=pe_axes, cfg=cfg, **kw)
+    s_np = np.asarray(jax.device_get(s_out))
+    r_np = np.asarray(jax.device_get(r_out))
+    return unpack_results(s_np, r_np, offsets), stats
+
+
+def rank_lists(batch, mesh, **kw):
+    """Convenience wrapper: the per-instance (succ, rank) results only."""
+    results, _ = rank_lists_with_stats(batch, mesh, **kw)
+    return results
+
+
+def solve_forest(parents: Sequence[np.ndarray], mesh, pe_axes=None,
+                 cfg: ListRankConfig | None = None, **kw):
+    """Tree statistics for B independent trees in one batched solve.
+
+    Packs the parent arrays into one forest (offset-relabelled roots
+    stay self-parented), builds a single device tour, ranks both
+    weightings through the batched front door, and splits the
+    :class:`~repro.core.treealg.ops.TreeStats` back per tree.
+    """
+    from repro.core.treealg import ops
+    parents = [np.asarray(jax.device_get(q)).astype(np.int64)
+               for q in parents]
+    if not parents:
+        raise ValueError("empty forest batch")
+    for b, q in enumerate(parents):
+        # validate per tree BEFORE packing: an out-of-range parent
+        # would become a valid pointer into a neighbor's id window
+        if q.shape[0] == 0 or not ((q >= 0) & (q < q.shape[0])).all():
+            raise ValueError(f"tree {b}: parent pointers out of range")
+    sizes = np.array([q.shape[0] for q in parents], np.int64)
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    packed = np.concatenate(
+        [q + off for q, off in zip(parents, offsets)])
+    st = ops.tree_stats(packed, mesh, pe_axes=pe_axes, cfg=cfg, **kw)
+    out = []
+    for b in range(len(parents)):
+        lo, hi = int(offsets[b]), int(offsets[b + 1])
+        out.append(ops.TreeStats(
+            parent=st.parent[lo:hi] - lo, root_of=st.root_of[lo:hi] - lo,
+            depth=st.depth[lo:hi], subtree_size=st.subtree_size[lo:hi],
+            preorder=st.preorder[lo:hi], postorder=st.postorder[lo:hi],
+            stats=st.stats))
+    return out

@@ -1,0 +1,256 @@
+"""Device-side Euler-tour construction from a sharded parent array.
+
+The tree (or forest) arrives as block-sharded parent pointers — node c
+on PE ``c // m`` with ``parent[root] == root`` — and leaves as the
+tour's list-ranking instance: a sharded successor array over the arc
+ids plus the matching weights. The layout gives node c the two arc
+slots ``down(c) = 2c`` and ``up(c) = 2c + 1`` (``(q→c)`` and ``(c→q)``
+for q = parent[c]); a root's slots are weight-0 self-loop dummies, so
+the arc array is exactly twice the node array and shards on the same
+block boundaries — PE k owns the arcs of its own nodes.
+
+Construction is two exchange rounds over the mesh (paper §2.4 routing,
+one packed ``all_to_all`` each on the direct plan):
+
+  1. every non-root node reports ``(child, parent)`` to its parent's
+     owner. The owner recovers each node's adjacency list as one run of
+     :func:`exchange.sort_and_group` (children pre-sorted by id, then
+     stably grouped by parent — the same single-sort discipline as the
+     routing hot path), which yields first-child marks (run starts) and
+     next-sibling links (run neighbors) in one pass.
+  2. the owner replies ``(next_sibling, parent_is_root, parent's first
+     child)`` to each child's owner.
+
+Everything else is local arc arithmetic (module constants of the
+layout). Capacities for both rounds are *exact*: the host derives the
+per-(sender, receiver) message histogram from the parent array, so no
+leftover re-routing round is ever needed — any nonzero
+``tour_undelivered`` stat is defensive and triggers the standard
+doubling retry.
+
+The host-side :func:`repro.core.listrank.instances.gen_euler_tour` is
+the oracle (its ``2(c-1)`` arc ids shift to this module's ``2c`` by
+dropping the root's two dummy slots — see :func:`oracle_tour`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.core.listrank import exchange as exchange_lib
+from repro.core.listrank.config import ListRankConfig
+from repro.core.listrank.exchange import INT_MAX, MeshPlan
+
+
+def down(c):
+    """Arc id of (parent(c) → c) in the device layout."""
+    return 2 * c
+
+
+def up(c):
+    """Arc id of (c → parent(c)) in the device layout."""
+    return 2 * c + 1
+
+
+def tour_caps(parent: np.ndarray, p: int) -> tuple[int, int]:
+    """Exact per-peer mailbox capacities for the two construction
+    rounds: the max entry of the (sender, receiver) message histogram,
+    and of its transpose for the replies."""
+    n = parent.shape[0]
+    m = n // p
+    idx = np.arange(n)
+    nonroot = parent != idx
+    hist = np.zeros((p, p), np.int64)
+    np.add.at(hist, (idx[nonroot] // m, parent[nonroot] // m), 1)
+    c1 = int(hist.max()) if nonroot.any() else 0
+    return max(c1, 8), max(c1, 8)  # reply histogram = transpose, same max
+
+
+def _build_sharded(parent, cut, *, plan: MeshPlan, m: int, child_cap: int,
+                   reply_cap: int, weighted: bool, closed: bool):
+    """Per-PE tour construction (runs under shard_map)."""
+    pe = plan.my_id().astype(jnp.int32)
+    base = pe * m
+    lidx = jnp.arange(m, dtype=jnp.int32)
+    gid = base + lidx
+    q = parent.astype(jnp.int32)
+    is_root = q == gid
+    nonroot = ~is_root
+
+    def owner_of(g):
+        return g // m
+
+    caps1 = [child_cap] * plan.indirection.depth
+    caps2 = [reply_cap] * plan.indirection.depth
+
+    # round 1: children report to their parent's owner
+    delivered, dval, _, st1 = exchange_lib.route(
+        plan, caps1, {"child": gid, "parent": q},
+        owner_of(q).astype(jnp.int32), nonroot)
+
+    # adjacency runs: one pre-sort by child id, then the shared
+    # sort_and_group stably groups by parent — within each parent's run
+    # the children are ascending, i.e. the tour's adjacency order.
+    ch, par = delivered["child"], delivered["parent"]
+    ordc = jnp.argsort(jnp.where(dval, ch, INT_MAX), stable=True)
+    ch_c, par_c, val_c = ch[ordc], par[ordc], dval[ordc]
+    order, skey, _, newrun = exchange_lib.sort_and_group(par_c, val_c, INT_MAX)
+    ch_s = ch_c[order]
+    val_s = skey != INT_MAX
+
+    # first child of each local node: the run starts, scattered by the
+    # (local) parent id. skey of a valid run is owned here by routing.
+    pslot = jnp.where(val_s, skey - base, m)
+    fc = jnp.full(m, -1, jnp.int32).at[
+        jnp.where(newrun & val_s, pslot, m)].set(ch_s, mode="drop")
+    # next sibling: the following sorted row, if it is in the same run
+    has_next = jnp.concatenate([~newrun[1:], jnp.zeros((1,), jnp.bool_)])
+    ns_row = jnp.where(
+        has_next, jnp.concatenate([ch_s[1:], jnp.full((1,), -1, jnp.int32)]),
+        -1)
+    pslot_c = jnp.clip(pslot, 0, m - 1)
+    par_root = val_s & is_root[pslot_c]
+    par_fc = fc[pslot_c]
+
+    # round 2: reply (next sibling, parent-is-root, parent's first
+    # child) to each child's owner
+    rdel, rval, _, st2 = exchange_lib.route(
+        plan, caps2,
+        {"child": ch_s, "ns": ns_row, "proot": par_root, "pfc": par_fc},
+        owner_of(ch_s).astype(jnp.int32), val_s)
+    rslot = jnp.where(rval, rdel["child"] - base, m)
+    ns = jnp.full(m, -1, jnp.int32).at[rslot].set(rdel["ns"], mode="drop")
+    proot = jnp.zeros(m, jnp.bool_).at[rslot].set(rdel["proot"], mode="drop")
+    pfc = jnp.full(m, -1, jnp.int32).at[rslot].set(rdel["pfc"], mode="drop")
+    have = jnp.zeros(m, jnp.bool_).at[rslot].set(True, mode="drop")
+
+    # local arc assembly (tour successor rules, euler.py module doc)
+    succ_down = jnp.where(fc >= 0, down(fc), up(gid))
+    # last sibling: up(parent), except at the root where the tour is cut
+    # (terminal) — or, for a closed tour, wraps to the root's first arc.
+    at_root_end = down(pfc) if closed else up(gid)
+    succ_up = jnp.where(ns >= 0, down(ns),
+                        jnp.where(proot, at_root_end, up(q)))
+    if closed:
+        # cut the circular tour at `cut`: down(cut) becomes the terminal
+        succ_down = jnp.where(gid == cut, down(gid), succ_down)
+    succ_down = jnp.where(nonroot, succ_down, down(gid))
+    succ_up = jnp.where(nonroot, succ_up, up(gid))
+    succ = jnp.stack([succ_down, succ_up], axis=1).reshape(2 * m)
+
+    arc_gid = 2 * base + jnp.arange(2 * m, dtype=jnp.int32)
+    is_term = succ == arc_gid
+    if weighted:
+        w = jnp.where(arc_gid % 2 == 0, jnp.int32(1), jnp.int32(-1))
+    else:
+        w = jnp.ones(2 * m, jnp.int32)
+    w = jnp.where(is_term, 0, w)
+
+    missing = jnp.sum(nonroot & ~have).astype(jnp.int32)
+    stats = {"tour_undelivered": lax.psum(
+        missing + st1["leftover"] + st2["leftover"], plan.pe_axes),
+        "tour_msgs": lax.psum(
+            sum(st1["sent"] + st2["sent"]).astype(jnp.int32), plan.pe_axes)}
+    return succ, w, stats
+
+
+@functools.lru_cache(maxsize=128)
+def _jitted_builder(mesh, plan, m, child_cap, reply_cap, weighted, closed):
+    fn = functools.partial(_build_sharded, plan=plan, m=m,
+                           child_cap=child_cap, reply_cap=reply_cap,
+                           weighted=weighted, closed=closed)
+    spec = P(plan.pe_axes)
+    mapped = compat.shard_map(fn, mesh=mesh, in_specs=(spec, P()),
+                              out_specs=(spec, spec, P()), check_vma=False)
+    return jax.jit(mapped)
+
+
+def build_tour(parent, mesh, pe_axes=None, cfg: ListRankConfig | None = None,
+               weighted: bool = False, cut_at: int | None = None,
+               max_retries: int = 2):
+    """Build the Euler tour of a block-sharded tree/forest on the mesh.
+
+    Args:
+      parent: (n_nodes,) parent pointers, ``parent[root] == root``.
+        Multiple roots = a forest (each tree's tour is cut at its root).
+        Padded host-side with singleton roots to a PE multiple.
+      weighted: ±1 depth weights instead of unit weights.
+      cut_at: close every root loop and cut the (single) tree's circular
+        tour at ``down(cut_at)`` instead — the re-rooting primitive
+        behind :func:`repro.core.treealg.ops.root_tree`. Requires a
+        single-tree input.
+
+    Returns:
+      (succ, weight, n_pad): sharded (2*n_pad,) int32 arrays — a
+      list-ranking instance over the arc ids — and the padded node
+      count. Slots of padding/root nodes are weight-0 self-loops.
+    """
+    cfg = cfg or ListRankConfig()
+    pe_axes = tuple(pe_axes) if pe_axes is not None else tuple(mesh.axis_names)
+    parent_np = np.asarray(jax.device_get(parent)).astype(np.int64)
+    n = parent_np.shape[0]
+    if n == 0:
+        raise ValueError("empty tree")
+    idx = np.arange(n)
+    if not ((parent_np >= 0) & (parent_np < n)).all():
+        raise ValueError("parent pointers out of range")
+    closed = cut_at is not None
+    if closed:
+        roots = idx[parent_np == idx]
+        if roots.size != 1:
+            raise ValueError("cut_at requires a single-tree input")
+        if not 0 <= cut_at < n:
+            raise ValueError("cut_at out of range")
+        if cut_at == int(roots[0]):
+            closed = False  # already rooted there; the default cut is it
+    plan = MeshPlan.from_mesh(mesh, pe_axes, None,
+                              wire_packing=cfg.wire_packing,
+                              pallas_pack=cfg.use_pallas_pack)
+    p = plan.p
+    pad = (-n) % p
+    parent_pad = np.concatenate([parent_np, np.arange(n, n + pad)])
+    n_pad = n + pad
+    m = n_pad // p
+    sharding = NamedSharding(mesh, P(pe_axes))
+    parent_d = jax.device_put(jnp.asarray(parent_pad, jnp.int32), sharding)
+    cut_d = jnp.int32(cut_at if closed else -1)
+
+    cap1, cap2 = tour_caps(parent_pad, p)
+    for attempt in range(max_retries + 1):
+        builder = _jitted_builder(mesh, plan, m, cap1, cap2, weighted, closed)
+        succ, w, stats = builder(parent_d, cut_d)
+        if int(jax.device_get(stats["tour_undelivered"])) == 0:
+            return succ, w, n_pad
+        cap1, cap2 = 2 * cap1, 2 * cap2  # defensive: caps are exact
+    raise RuntimeError(
+        f"Euler tour construction incomplete after {max_retries + 1} "
+        f"attempts; stats={jax.device_get(stats)}")
+
+
+def oracle_tour(n_nodes: int, parent: np.ndarray) -> np.ndarray:
+    """Host-side oracle in the *device* layout: the expected successor
+    array for a rooted forest, built by relabeling the
+    ``instances.gen_euler_tour`` construction rules (its ``2(c-1)``
+    ids become ``2c``; roots gain self-loop dummy slots)."""
+    from repro.core.listrank import instances
+    n = n_nodes
+    idx = np.arange(n)
+    is_root = parent == idx
+    cand = idx[~is_root]
+    first_child, next_sib = instances.adjacency_links(np.asarray(parent,
+                                                                 np.int64))
+    succ = np.arange(2 * n, dtype=np.int64)
+    c = cand
+    q = parent[c]
+    fc = first_child[c]
+    ns = next_sib[c]
+    succ[2 * c] = np.where(fc >= 0, 2 * fc, 2 * c + 1)
+    succ[2 * c + 1] = np.where(ns >= 0, 2 * ns,
+                               np.where(is_root[q], 2 * c + 1, 2 * q + 1))
+    return succ

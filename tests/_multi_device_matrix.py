@@ -30,6 +30,11 @@ def main():
                                           weighted=True)
     se, re_, _ = instances.gen_euler_tour(n // 2 + 1, seed=6, locality=True)
     se, re_ = instances.pad_to_multiple(se, re_, 8)
+    sg, rg = instances.gen_euler_tour(n // 2 + 1, seed=7, locality=False)[:2]
+    sg, rg = instances.pad_to_multiple(sg, rg, 8)
+    sw, rw = instances.gen_euler_tour(n // 2 + 1, seed=8, locality=True,
+                                      weighted=True, num_trees=5)[:2]
+    sw, rw = instances.pad_to_multiple(sw, rw, 8)
 
     cases = [
         ("srs1 direct", sg1, rg1, base, None),
@@ -44,6 +49,15 @@ def main():
         ("weighted multilist", sml, rml,
          base.with_(srs_rounds=2, local_contraction=True), None),
         ("euler contract", se, re_, base.with_(local_contraction=True), None),
+        # faithful Algorithm-1 direction handling (explicit reversal
+        # preprocessing) on Euler-tour instances — both tree models,
+        # plus a ±1-weighted forest tour through the reversal build
+        ("euler rgg2d reversal", se, re_,
+         base.with_(avoid_reversal=False), None),
+        ("euler gnm reversal grid", sg, rg,
+         base.with_(avoid_reversal=False, local_contraction=True), grid),
+        ("euler weighted forest reversal", sw, rw,
+         base.with_(avoid_reversal=False, srs_rounds=2), None),
         ("pallas contract", sg1, rg1,
          base.with_(local_contraction=True, use_pallas=True), None),
         ("srs1 unpacked wire", sg1, rg1, base.with_(wire_packing=False),

@@ -1,0 +1,35 @@
+"""Shared per-node oracle for the treealg tests: explicit DFS with
+ascending-id children (the tour's adjacency order). Used by
+tests/test_treealg.py and the tests/_treealg_multi.py subprocess."""
+import sys
+
+import numpy as np
+
+
+def dfs_stats(parent):
+    """(depth, subtree_size, preorder, postorder) by recursive DFS."""
+    sys.setrecursionlimit(1000000)
+    n = len(parent)
+    children = [[] for _ in range(n)]
+    for c in range(n):
+        if parent[c] != c:
+            children[parent[c]].append(c)
+    depth = np.zeros(n, np.int64)
+    size = np.ones(n, np.int64)
+    pre = np.zeros(n, np.int64)
+    post = np.zeros(n, np.int64)
+    for r in [c for c in range(n) if parent[c] == c]:
+        cp, cs = [0], [0]
+
+        def dfs(u, d):
+            depth[u] = d
+            pre[u] = cp[0]
+            cp[0] += 1
+            for v in children[u]:
+                dfs(v, d + 1)
+                size[u] += size[v]
+            post[u] = cs[0]
+            cs[0] += 1
+
+        dfs(r, 0)
+    return depth, size, pre, post

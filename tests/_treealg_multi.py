@@ -1,0 +1,102 @@
+"""Subprocess body for multi-PE treealg tests (8 virtual devices).
+
+Run as: python tests/_treealg_multi.py — exits nonzero on any mismatch
+against the DFS / instances.py oracles. Must set XLA_FLAGS before jax.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from _tree_oracles import dfs_stats  # noqa: E402
+from repro import compat  # noqa: E402
+from repro.core import treealg  # noqa: E402
+from repro.core.listrank import (ListRankConfig, instances,  # noqa: E402
+                                 rank_list_seq)
+from repro.core.listrank.instances import gen_tree_parents  # noqa: E402
+
+
+def main():
+    mesh = compat.make_mesh((2, 4), ("row", "col"))
+    cfg = ListRankConfig(srs_rounds=1, local_contraction=True)
+    failures = 0
+
+    def check(name, ok):
+        nonlocal failures
+        print(("OK  " if ok else "FAIL") + f" {name}")
+        failures += 0 if ok else 1
+
+    # device tour construction vs host oracle across families (blocks
+    # span PEs, children cross PE boundaries)
+    for name, kw in [("tour gnm", dict(locality=False)),
+                     ("tour rgg2d", dict(locality=True)),
+                     ("tour forest", dict(locality=False, num_trees=7))]:
+        n = 501
+        parent = gen_tree_parents(n, seed=len(name), **kw)
+        succ, w, _ = treealg.build_tour(parent, mesh, cfg=cfg)
+        got = np.asarray(jax.device_get(succ))[:2 * n]
+        check(name, np.array_equal(got,
+                                   treealg.oracle_tour(n, parent).astype(
+                                       np.int32)))
+
+    # tree statistics vs DFS oracle
+    for name, kw in [("stats gnm", dict(locality=False)),
+                     ("stats rgg2d", dict(locality=True)),
+                     ("stats forest", dict(locality=True, num_trees=5))]:
+        parent = gen_tree_parents(409, seed=3 + len(name), **kw)
+        st = treealg.tree_stats(parent, mesh, cfg=cfg)
+        d, s, pre, post = dfs_stats(parent)
+        check(name, np.array_equal(st.depth, d)
+              and np.array_equal(st.subtree_size, s)
+              and np.array_equal(st.preorder, pre)
+              and np.array_equal(st.postorder, post))
+
+    # re-rooting
+    parent = gen_tree_parents(300, 17)
+    newp = treealg.root_tree(parent, 271, mesh, cfg=cfg)
+    e_old = {frozenset((c, int(parent[c]))) for c in range(300)
+             if parent[c] != c}
+    e_new = {frozenset((c, int(newp[c]))) for c in range(300)
+             if newp[c] != c}
+    d2, _, _, _ = dfs_stats(newp)
+    check("root_tree", e_old == e_new and newp[271] == 271
+          and d2[271] == 0)
+
+    # batched front door: one invocation, oracle-correct per instance
+    batch = [instances.gen_list(128, gamma=1.0, seed=s) for s in range(3)]
+    batch.append(instances.gen_random_lists(160, num_lists=6, seed=5,
+                                            weighted=True))
+    se, re_, _ = instances.gen_euler_tour(65, seed=6, weighted=True,
+                                          num_trees=2)
+    batch.append((se, re_))
+    results, stats = treealg.rank_lists_with_stats(batch, mesh, cfg=cfg)
+    ok = stats["attempts"] == 1
+    for (s_in, r_in), (s_out, r_out) in zip(batch, results):
+        s_ref, r_ref = rank_list_seq(s_in, r_in)
+        ok = ok and np.array_equal(s_out, s_ref) \
+            and np.array_equal(r_out, r_ref)
+    check("rank_lists batch of 5", ok)
+
+    # solve_forest: B trees, one tour build + one batched solve
+    parents = [gen_tree_parents(n, seed=n, locality=bool(n % 2))
+               for n in (9, 47, 120, 200)]
+    out = treealg.solve_forest(parents, mesh, cfg=cfg)
+    ok = True
+    for q, st in zip(parents, out):
+        d, s, pre, post = dfs_stats(q)
+        ok = ok and np.array_equal(st.depth, d) \
+            and np.array_equal(st.subtree_size, s) \
+            and np.array_equal(st.preorder, pre) \
+            and np.array_equal(st.postorder, post)
+    check("solve_forest", ok)
+
+    print("failures:", failures)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -142,6 +142,117 @@ def test_gen_euler_tour_matches_loop_reference(n_nodes, locality, seed):
 
 
 # --------------------------------------------------------------------------
+# weighted tours and forests: oracle = per-node recomputation
+# --------------------------------------------------------------------------
+
+def node_depths_from_parent(parent):
+    """Per-node depth by chasing the parent pointers (loop oracle)."""
+    n = parent.shape[0]
+    depth = np.zeros(n, np.int64)
+    for c in range(n):
+        d, x = 0, c
+        while parent[x] != x:
+            x = parent[x]
+            d += 1
+        depth[c] = d
+    return depth
+
+
+def parents_of_instance(n_nodes, seed, locality, num_trees):
+    """The parent array behind a gen_euler_tour instance (the public
+    generator shares the tour's RNG stream by construction)."""
+    return instances.gen_tree_parents(n_nodes, seed=seed,
+                                      locality=locality,
+                                      num_trees=num_trees)
+
+
+@pytest.mark.parametrize("n_nodes,locality,num_trees,seed", [
+    (2, False, 1, 0), (40, False, 1, 1), (40, True, 1, 2),
+    (60, False, 4, 3), (60, True, 7, 4), (9, False, 9, 5), (150, True, 3, 6),
+])
+def test_weighted_tour_recovers_depth(n_nodes, locality, num_trees, seed):
+    """Ranking the ±1-weighted tour must recover every node's depth:
+    depth(c) = 2 - rank±(down(c)) (see gen_euler_tour docstring) —
+    checked against per-node parent chasing."""
+    from repro.core.listrank.sequential import rank_list_seq
+    succ, rank, arcs = instances.gen_euler_tour(
+        n_nodes, seed=seed, locality=locality, weighted=True,
+        num_trees=num_trees)
+    parent = parents_of_instance(n_nodes, seed, locality, num_trees)
+    depth_ref = node_depths_from_parent(parent)
+    _, r = rank_list_seq(succ, rank)
+    nonroot = parent != np.arange(n_nodes)
+    for c in np.nonzero(nonroot)[0]:
+        assert 2 - r[2 * (c - 1)] == depth_ref[c], f"node {c}"
+    # down-arcs carry +1, up-arcs -1, terminals/dummies 0
+    idx = np.arange(succ.shape[0])
+    term = succ == idx
+    np.testing.assert_array_equal(rank[term], 0)
+    np.testing.assert_array_equal(rank[~term & (idx % 2 == 0)], 1)
+    np.testing.assert_array_equal(rank[~term & (idx % 2 == 1)], -1)
+
+
+@pytest.mark.parametrize("n_nodes,locality,num_trees,seed", [
+    (50, False, 5, 0), (50, True, 2, 1), (100, False, 10, 2),
+    (7, True, 7, 3),
+])
+def test_forest_tour_structure(n_nodes, locality, num_trees, seed):
+    """Every tree of the forest contributes one complete cut tour: per
+    tree 2*(size-1) arcs chase to a single terminal, and the remaining
+    slots are the roots' dummies — checked per node."""
+    from repro.core.listrank.sequential import rank_list_seq
+    succ, rank, arcs = instances.gen_euler_tour(
+        n_nodes, seed=seed, locality=locality, num_trees=num_trees)
+    parent = parents_of_instance(n_nodes, seed, locality, num_trees)
+    nodes = np.arange(n_nodes)
+    roots = nodes[parent == nodes]
+    assert roots.size == num_trees
+    # tree membership per node (loop recomputation)
+    root_of = np.empty(n_nodes, np.int64)
+    for c in range(n_nodes):
+        x = c
+        while parent[x] != x:
+            x = parent[x]
+        root_of[c] = x
+    sizes = {int(r): int(np.sum(root_of == r)) for r in roots}
+    s_out, r_out = rank_list_seq(succ, rank)
+    idx = np.arange(succ.shape[0])
+    for r in roots:
+        members = nodes[(root_of == r) & (nodes != r)]
+        tree_arcs = np.concatenate(
+            [2 * (members - 1), 2 * (members - 1) + 1]) if members.size \
+            else np.zeros(0, np.int64)
+        # all arcs of one tree end at one shared terminal...
+        assert len(set(s_out[tree_arcs].tolist())) <= 1
+        # ...and their unweighted ranks are a permutation of the tour
+        # positions 0..2(size-1)-1
+        np.testing.assert_array_equal(
+            np.sort(r_out[tree_arcs]), np.arange(2 * (sizes[int(r)] - 1)))
+    # dummy slots of non-0 roots self-loop and carry (r, r) arcs
+    for r in roots[roots > 0]:
+        for a in (2 * (r - 1), 2 * (r - 1) + 1):
+            assert succ[a] == a and rank[a] == 0
+            np.testing.assert_array_equal(arcs[a], (r, r))
+
+
+def test_forest_rng_stream_backward_compatible():
+    """num_trees=1 / weighted=False must reproduce the pre-extension
+    instance bit for bit (the extra draws happen after the tree)."""
+    s0, r0, a0 = ref_gen_euler_tour(80, seed=9, locality=True)
+    s1, r1, a1 = instances.gen_euler_tour(80, seed=9, locality=True,
+                                          weighted=False, num_trees=1)
+    np.testing.assert_array_equal(s0, s1)
+    np.testing.assert_array_equal(r0, r1)
+    np.testing.assert_array_equal(a0, a1)
+    # weighted shares the tour structure, only the weights change
+    s2, r2, a2 = instances.gen_euler_tour(80, seed=9, locality=True,
+                                          weighted=True)
+    np.testing.assert_array_equal(s0, s2)
+    np.testing.assert_array_equal(a0, a2)
+    assert set(np.unique(r2)) <= {-1, 0, 1}
+
+
+# --------------------------------------------------------------------------
 # structural sanity at a size the loop version could not handle quickly
 # --------------------------------------------------------------------------
 

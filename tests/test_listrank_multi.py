@@ -17,3 +17,13 @@ def test_multi_device_matrix():
     print(proc.stdout)
     print(proc.stderr[-2000:] if proc.stderr else "")
     assert proc.returncode == 0, "multi-device matrix failed"
+
+
+@pytest.mark.slow
+def test_treealg_multi_device():
+    script = pathlib.Path(__file__).parent / "_treealg_multi.py"
+    proc = subprocess.run([sys.executable, str(script)],
+                          capture_output=True, text=True, timeout=2400)
+    print(proc.stdout)
+    print(proc.stderr[-2000:] if proc.stderr else "")
+    assert proc.returncode == 0, "multi-device treealg matrix failed"

@@ -1,0 +1,156 @@
+"""Oracle tests for the vectorized sequential ranker.
+
+``rank_list_seq`` was rewritten from a per-terminal Python walk (plus a
+second cycle-check walk — two O(n) interpreter loops) to vectorized
+numpy pointer jumping. The original walk implementation is kept *here*
+as the oracle-of-oracles (same pattern as the ``instances.py``
+vectorization): outputs must match exactly on integer weights and to
+float tolerance on float32 weights, and both error behaviors
+(non-zero terminal weight, cycles) must be preserved.
+"""
+import numpy as np
+import pytest
+
+from repro.core.listrank import instances
+from repro.core.listrank.sequential import rank_list_seq
+
+
+def ref_rank_list_seq(succ, rank=None):
+    """The pre-vectorization implementation: walk each list backwards
+    from its terminal accumulating distance."""
+    succ = np.asarray(succ)
+    n = succ.shape[0]
+    idx = np.arange(n, dtype=succ.dtype)
+    if rank is None:
+        rank = (succ != idx).astype(np.int64)
+    rank = np.asarray(rank)
+    if not np.all(rank[succ == idx] == 0):
+        raise ValueError("terminal elements must carry weight 0")
+
+    succ_out = np.empty_like(succ)
+    rank_out = np.zeros(n, dtype=rank.dtype)
+    nonterm = succ != idx
+    pred = np.full(n, -1, dtype=np.int64)
+    pred[succ[nonterm]] = idx[nonterm]
+    terminals = idx[succ == idx]
+    for t in terminals:
+        succ_out[t] = t
+        rank_out[t] = 0
+        cur = pred[t]
+        dist = rank_out[t]
+        while cur != -1:
+            dist = dist + rank[cur]
+            succ_out[cur] = t
+            rank_out[cur] = dist
+            cur = pred[cur]
+    visited = np.zeros(n, dtype=bool)
+    visited[terminals] = True
+    for t in terminals:
+        cur = pred[t]
+        while cur != -1:
+            visited[cur] = True
+            cur = pred[cur]
+    if not visited.all():
+        raise ValueError("input contains a cycle (not a set of lists)")
+    return succ_out, rank_out
+
+
+@pytest.mark.parametrize("n,gamma,num_lists,seed", [
+    (1, 0.0, 1, 0), (2, 1.0, 1, 1), (17, 0.5, 1, 2), (64, 1.0, 1, 3),
+    (128, 0.3, 5, 4), (257, 1.0, 9, 5),
+])
+def test_matches_walk_on_lists(n, gamma, num_lists, seed):
+    succ, rank = instances.gen_list(n, gamma, seed=seed, num_lists=num_lists)
+    s_ref, r_ref = ref_rank_list_seq(succ, rank)
+    s, r = rank_list_seq(succ, rank)
+    np.testing.assert_array_equal(s, s_ref)
+    np.testing.assert_array_equal(r, r_ref)
+    assert r.dtype == r_ref.dtype
+
+
+@pytest.mark.parametrize("n,num_lists,seed", [
+    (64, 3, 0), (200, 11, 1), (333, 1, 2),
+])
+def test_matches_walk_weighted(n, num_lists, seed):
+    succ, rank = instances.gen_random_lists(n, num_lists=num_lists,
+                                            seed=seed, weighted=True)
+    s_ref, r_ref = ref_rank_list_seq(succ, rank)
+    s, r = rank_list_seq(succ, rank)
+    np.testing.assert_array_equal(s, s_ref)
+    np.testing.assert_array_equal(r, r_ref)
+
+
+def test_matches_walk_default_rank():
+    succ, _ = instances.gen_list(100, gamma=1.0, seed=7, num_lists=4)
+    s_ref, r_ref = ref_rank_list_seq(succ)
+    s, r = rank_list_seq(succ)
+    np.testing.assert_array_equal(s, s_ref)
+    np.testing.assert_array_equal(r, r_ref)
+    assert r.dtype == np.int64
+
+
+def test_matches_walk_signed_weights():
+    """±1 Euler-tour weights (negative links) rank identically."""
+    succ, rank, _ = instances.gen_euler_tour(129, seed=3, weighted=True)
+    s_ref, r_ref = ref_rank_list_seq(succ, rank)
+    s, r = rank_list_seq(succ, rank)
+    np.testing.assert_array_equal(s, s_ref)
+    np.testing.assert_array_equal(r, r_ref)
+
+
+def test_matches_walk_float_weights():
+    rng = np.random.default_rng(0)
+    succ, _ = instances.gen_random_lists(128, num_lists=4, seed=13)
+    w = rng.uniform(0.0, 2.0, 128).astype(np.float32)
+    w[succ == np.arange(128)] = 0.0
+    s_ref, r_ref = ref_rank_list_seq(succ, w)
+    s, r = rank_list_seq(succ, w)
+    np.testing.assert_array_equal(s, s_ref)
+    # accumulation order differs (backward walk vs pairwise jumping)
+    np.testing.assert_allclose(r, r_ref, rtol=1e-5, atol=1e-5)
+    assert r.dtype == np.float32
+
+
+def test_empty_input():
+    s, r = rank_list_seq(np.zeros(0, np.int32))
+    assert s.shape == (0,) and r.shape == (0,)
+
+
+def test_rejects_nonzero_terminal_weight():
+    succ = np.array([1, 1], np.int32)
+    rank = np.array([1, 5], np.int64)
+    with pytest.raises(ValueError, match="terminal"):
+        rank_list_seq(succ, rank)
+    with pytest.raises(ValueError, match="terminal"):
+        ref_rank_list_seq(succ, rank)
+
+
+@pytest.mark.parametrize("succ", [
+    [1, 0],                  # 2-cycle (collapses to a spurious fixed
+                             # point under jumping — the regression case)
+    [1, 2, 0],               # 3-cycle
+    [1, 2, 0, 4, 4],         # cycle plus a healthy list
+])
+def test_rejects_cycles(succ):
+    succ = np.asarray(succ, np.int32)
+    rank = (succ != np.arange(len(succ))).astype(np.int64)
+    with pytest.raises(ValueError, match="cycle"):
+        rank_list_seq(succ, rank)
+    with pytest.raises(ValueError, match="cycle"):
+        ref_rank_list_seq(succ, rank)
+
+
+@pytest.mark.parametrize("succ", [
+    [2, 2, 2],               # two elements share a successor (a tree)
+    [1, 2, 3, 1],            # rho: tail merging into a cycle
+    [3, 3, 3, 3, 5, 5],      # three-way merge plus a healthy list
+])
+def test_rejects_merged_lists(succ):
+    """In-degree >= 2 is not a set of lists; jumping would silently
+    rank it, so the oracle must reject it like the walk version did."""
+    succ = np.asarray(succ, np.int32)
+    rank = (succ != np.arange(len(succ))).astype(np.int64)
+    with pytest.raises(ValueError, match="not a set of lists"):
+        rank_list_seq(succ, rank)
+    with pytest.raises(ValueError, match="not a set of lists"):
+        ref_rank_list_seq(succ, rank)
