@@ -5,6 +5,8 @@
   fig4_indirection Fig 4: indirection schemes + phase breakdown
   treealg_bench    Euler-tour tree statistics per tree family + the
                    batched multi-instance front door
+  graphalg_bench   connectivity + spanning-forest statistics per edge
+                   family (the hooking pipeline's second comm pattern)
   roofline         the (arch x shape) roofline table from the dry-run
                    artifacts (see repro.launch.dryrun)
 
@@ -131,38 +133,41 @@ def fig4_indirection() -> list[dict]:
     return rows
 
 
-def exchange_micro() -> list[dict]:
-    """Exchange-layer microbenchmark (packed vs unpacked wire): runs in
-    a subprocess (fixed virtual-device count), re-emits its CSV rows."""
-    proc = subprocess.run([sys.executable, str(HERE / "exchange_bench.py")],
+def _subprocess_bench(prefix: str, script: str,
+                      quick_artifact: bool = True) -> list[dict]:
+    """Run a standalone bench script in a subprocess (its virtual-
+    device count must be fixed before jax initializes) and re-emit its
+    CSV rows. Quick mode reads the script's own *_quick.json artifact
+    where one exists — the committed <prefix>.json is full-mode only
+    and must not be mistaken for a quick run's data."""
+    proc = subprocess.run([sys.executable, str(HERE / script)],
                           capture_output=True, text=True, timeout=3600)
     for line in proc.stdout.splitlines():
-        if line.startswith("exchange/"):
+        if line.startswith(f"{prefix}/"):
             print(line)
     if proc.returncode != 0:
-        print(f"exchange/error,0,rc={proc.returncode}")
+        print(f"{prefix}/error,0,rc={proc.returncode}")
         print(proc.stderr[-1000:])
         return []
-    f = RESULTS / "exchange.json"
+    f = RESULTS / (f"{prefix}_quick.json" if QUICK and quick_artifact
+                   else f"{prefix}.json")
     return json.loads(f.read_text()) if f.exists() else []
+
+
+def exchange_micro() -> list[dict]:
+    """Exchange-layer microbenchmark (packed vs unpacked wire)."""
+    return _subprocess_bench("exchange", "exchange_bench.py",
+                             quick_artifact=False)
 
 
 def treealg_bench() -> list[dict]:
-    """Tree-statistics + batched-front-door benchmark (fixed virtual-
-    device count => subprocess), re-emits its CSV rows."""
-    proc = subprocess.run([sys.executable, str(HERE / "treealg_bench.py")],
-                          capture_output=True, text=True, timeout=3600)
-    for line in proc.stdout.splitlines():
-        if line.startswith("treealg/"):
-            print(line)
-    if proc.returncode != 0:
-        print(f"treealg/error,0,rc={proc.returncode}")
-        print(proc.stderr[-1000:])
-        return []
-    # quick mode writes its own artifact (the committed treealg.json is
-    # full-mode only and must not be mistaken for this run's data)
-    f = RESULTS / ("treealg_quick.json" if QUICK else "treealg.json")
-    return json.loads(f.read_text()) if f.exists() else []
+    """Tree-statistics + batched-front-door benchmark."""
+    return _subprocess_bench("treealg", "treealg_bench.py")
+
+
+def graphalg_bench() -> list[dict]:
+    """Connectivity + graph_stats benchmark."""
+    return _subprocess_bench("graphalg", "graphalg_bench.py")
 
 
 def roofline() -> list[dict]:
@@ -195,6 +200,7 @@ def main() -> None:
     out["fig3_scaling"] = fig3_scaling()
     out["fig4_indirection"] = fig4_indirection()
     out["treealg"] = treealg_bench()
+    out["graphalg"] = graphalg_bench()
     out["roofline"] = roofline()
     (RESULTS / "benchmarks.json").write_text(json.dumps(out, indent=1))
     print(f"# wrote {RESULTS / 'benchmarks.json'}")

@@ -1,0 +1,260 @@
+"""Distributed connected components: min-label hooking + pointer
+jumping over block-sharded edge lists (the graphalg contraction core).
+
+The input is an edge list sharded like every other instance here — PE k
+owns edges ``[k*mE, (k+1)*mE)`` and nodes ``[k*m, (k+1)*m)`` — and the
+whole computation is bulk-synchronous rounds where every remote access
+rides the packed exchange layer (one ``all_to_all`` per hop). Per
+hooking round:
+
+  1. **label gather** — every edge fetches its endpoints' current
+     labels ``f[a], f[b]`` (static targets, host-exact capacities from
+     the endpoint histogram, request dedup per PE);
+  2. **hook proposals** — every cross-label edge proposes
+     ``f[max(la,lb)] = min(la,lb)`` to the owner of the larger label;
+     the owner applies the min proposal per *root* (``f[t] == t`` — a
+     node is hooked at most once, and always onto a strictly smaller
+     label, so the hook structure can never cycle) and resolves the
+     winning edge by a second scatter-min on edge ids;
+  3. **winner confirmation** — each hooked root confirms its winning
+     edge back to that edge's owning PE, which marks it as a
+     spanning-forest edge (one confirmed edge per hook = exactly
+     ``n - #components`` marks, and every mark merged two at-that-time
+     distinct components: the marks form a spanning forest);
+  4. **shortcut** — pointer jumping ``f = f[f]`` to a fixed point, so
+     next round's labels are component roots again.
+
+Labels only decrease and every component's minimum node id never
+hooks, so the algorithm converges with ``label == min node id of the
+component`` — a canonical labeling that doubles as the root choice for
+the spanning forest. Each round hooks every root that is not a local
+minimum among its neighbor components, which empirically converges in
+O(log n) rounds; the round budget is part of :class:`GraphCaps` and a
+``cc_unconverged`` stat triggers the tuner's ``graph``-family retry
+(doubled budget), same as every capacity here.
+
+Unlike the list-ranking chase, the proposal/confirmation destinations
+follow the *dynamic* label structure (hotspots concentrate on small
+labels), so those capacities are slack-based with targeted escalation
+rather than host-exact — exactly the second communication pattern the
+tuner's capacity families exist for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.listrank import exchange as exchange_lib
+from repro.core.listrank.config import ListRankConfig
+from repro.core.listrank.exchange import INT_MAX, MeshPlan
+from repro.core.listrank.srs import gather_until_done
+
+#: graphalg's own stat keys; the ``cc_*``/``tour_*``/``stats_*`` fatal
+#: keys map to the tuner's ``graph`` capacity family (tuner.FAMILY_OF).
+GRAPH_FATAL_KEYS = ("cc_undelivered", "cc_unconverged", "tour_undelivered",
+                    "stats_undelivered")
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCaps:
+    """Host-derived static capacities of the graphalg pipeline.
+
+    ``label`` and ``tour`` are sized from the exact endpoint histogram
+    of the full edge list (an upper bound for the forest subset, the
+    same discipline as ``treealg.euler.tour_caps``); the rest bound
+    dynamic-destination traffic with slack and rely on the retry loop.
+    """
+
+    label: int     #: endpoint label gather (host-exact, static targets)
+    prop: int      #: hook proposals to label owners (dynamic)
+    confirm: int   #: winner confirmations to edge owners (dynamic)
+    jump: int      #: pointer-jump gathers f[f] (dynamic, deduped)
+    tour: int      #: adjacency reports/replies + stats scatter (exact)
+    scalar: int    #: per-tree scalar traffic (tour length broadcast)
+    rounds: int    #: hooking-round budget
+    jumps: int     #: shortcut iterations per hooking round
+
+    def scaled(self, scale: float) -> "GraphCaps":
+        """The tuner's ``graph``-family escalation: every capacity —
+        including the round budget — times ``scale``."""
+        if scale == 1.0:
+            return self
+        s = max(scale, 1.0)
+        return GraphCaps(*(int(math.ceil(getattr(self, f.name) * s))
+                           for f in dataclasses.fields(self)))
+
+
+def endpoint_histogram(edges: np.ndarray, p: int, m: int) -> np.ndarray:
+    """Exact (edge-owner PE, endpoint-owner PE) message histogram of
+    one endpoint-addressed round — both endpoints of every edge."""
+    e_pad = edges.shape[0]
+    m_e = e_pad // p
+    src = np.repeat(np.arange(e_pad) // m_e, 2)
+    dst = edges.reshape(-1) // m
+    hist = np.zeros((p, p), np.int64)
+    np.add.at(hist, (src, dst), 1)
+    return hist
+
+
+def derive_caps(edges: np.ndarray, n_pad: int, p: int,
+                cfg: ListRankConfig) -> GraphCaps:
+    """Host-side capacity derivation for the pipeline (attempt 1)."""
+    e_pad = edges.shape[0]
+    m_e = e_pad // p
+    m = n_pad // p
+    slack = cfg.capacity_slack
+    hist_max = int(endpoint_histogram(edges, p, m).max()) if e_pad else 0
+    exact = max(cfg.min_capacity, hist_max)
+    per_peer = lambda q: max(cfg.min_capacity,
+                             int(math.ceil(slack * q / p)))
+    logn = max(int(math.ceil(math.log2(max(n_pad, 2)))), 1)
+    return GraphCaps(
+        label=exact,
+        prop=per_peer(m_e),
+        confirm=per_peer(m),
+        jump=per_peer(m),
+        tour=exact,
+        scalar=per_peer(m),
+        rounds=2 * logn + 16,
+        jumps=logn + 8,
+    )
+
+
+def zero_graph_stats():
+    z = jnp.int32(0)
+    return {"cc_rounds": z, "cc_msgs": z, "cc_undelivered": z,
+            "cc_unconverged": z, "tour_undelivered": z, "tour_msgs": z,
+            "stats_undelivered": z, "forest_edges": z}
+
+
+def _lookup_labels(f, base, m):
+    """Owner-side label lookup for gather rounds (targets are global
+    node ids; routing guarantees they are owned here)."""
+    def lookup(gids, valid):
+        slots = jnp.clip(gids - base, 0, m - 1).astype(jnp.int32)
+        return {"lab": f[slots]}
+    return lookup
+
+
+def _shortcut(plan: MeshPlan, caps: GraphCaps, f, base, m, owner_of):
+    """Pointer jumping ``f = f[f]`` to a fixed point (bounded)."""
+    def cond(c):
+        f, changed, it, und, msgs = c
+        return (changed > 0) & (it < caps.jumps)
+
+    def body(c):
+        f, _, it, und, msgs = c
+        resp, answered, gst = gather_until_done(
+            plan, f, jnp.ones(m, jnp.bool_), owner_of,
+            _lookup_labels(f, base, m), caps.jump, caps.jump, dedup=True)
+        nf = jnp.where(answered, resp["lab"], f)
+        changed = lax.psum(jnp.sum(nf != f).astype(jnp.int32), plan.pe_axes)
+        return nf, changed, it + 1, und + gst["undelivered"], \
+            msgs + gst["msgs"]
+
+    f, _, _, und, msgs = lax.while_loop(
+        cond, body, (f, jnp.int32(1), jnp.int32(0), jnp.int32(0),
+                     jnp.int32(0)))
+    return f, und, msgs
+
+
+def cc_rounds(plan: MeshPlan, caps: GraphCaps, ea, eb, m: int, m_e: int,
+              stats):
+    """The hooking loop (runs under shard_map).
+
+    Args:
+      ea/eb: (m_e,) int32 per-PE edge endpoints (global node ids);
+        padding edges are self-loops and never propose.
+
+    Returns (f, fmask, stats): the converged labels (m,), the local
+    spanning-forest edge marks (m_e,), and updated stats.
+    """
+    pe = plan.my_id().astype(jnp.int32)
+    base = pe * m
+    gid = base + jnp.arange(m, dtype=jnp.int32)
+    ebase = pe * m_e
+    eid = ebase + jnp.arange(m_e, dtype=jnp.int32)
+
+    def owner_node(g):
+        return g // m
+
+    f0 = gid
+    fmask0 = jnp.zeros(m_e, jnp.bool_)
+    targets = jnp.concatenate([ea, eb]).astype(jnp.int32)
+    tvalid = jnp.ones(2 * m_e, jnp.bool_)
+
+    def cond(c):
+        f, fmask, changed, it, st = c
+        return (changed > 0) & (it < caps.rounds)
+
+    def body(c):
+        f, fmask, _, it, st = c
+        # 1. endpoint labels (static targets, host-exact caps)
+        resp, answered, gst = gather_until_done(
+            plan, targets, tvalid, owner_node, _lookup_labels(f, base, m),
+            caps.label, caps.label, dedup=True)
+        la, lb = resp["lab"][:m_e], resp["lab"][m_e:]
+        # gather stats come back already psum'd; route stats are local
+        gund = gst["undelivered"]
+        msgs = gst["msgs"]
+        und = jnp.int32(0)
+
+        # 2. hook proposals: cross-label edges to the larger label
+        both = answered[:m_e] & answered[m_e:]
+        pvalid = both & (la != lb)
+        tgt = jnp.maximum(la, lb)
+        val = jnp.minimum(la, lb)
+        pcaps = [caps.prop] * plan.indirection.depth
+        dlv, dval, _, pst = exchange_lib.route(
+            plan, pcaps, {"t": tgt, "v": val, "e": eid},
+            owner_node(tgt).astype(jnp.int32), pvalid)
+        und = und + pst["leftover"]
+        msgs = msgs + sum(pst["sent"]).astype(jnp.int32)
+
+        # 3. apply: min proposal per root, winner edge by second
+        # scatter-min among the entries achieving it
+        slot = jnp.where(dval, dlv["t"] - base, m)
+        slot_c = jnp.clip(slot, 0, m - 1)
+        ok = dval & (f[slot_c] == dlv["t"])  # target still a root
+        minval = jnp.full(m + 1, INT_MAX, jnp.int32).at[
+            jnp.where(ok, slot, m)].min(dlv["v"], mode="drop")[:m]
+        hooked = minval < INT_MAX
+        win = ok & (dlv["v"] == minval[slot_c])
+        weid = jnp.full(m + 1, INT_MAX, jnp.int32).at[
+            jnp.where(win, slot, m)].min(dlv["e"], mode="drop")[:m]
+        f = jnp.where(hooked, minval, f)
+        n_hooked = lax.psum(jnp.sum(hooked).astype(jnp.int32), plan.pe_axes)
+
+        # 4. confirm winning edges to their owning PEs
+        ccaps = [caps.confirm] * plan.indirection.depth
+        weid_c = jnp.where(hooked, weid, 0)
+        cdlv, cval, _, cst = exchange_lib.route(
+            plan, ccaps, {"e": weid_c},
+            (weid_c // m_e).astype(jnp.int32), hooked)
+        und = und + cst["leftover"]
+        msgs = msgs + sum(cst["sent"]).astype(jnp.int32)
+        eslot = jnp.where(cval, cdlv["e"] - ebase, m_e)
+        fmask = fmask.at[eslot].set(True, mode="drop")
+
+        # 5. shortcut to stars for the next round
+        f, jund, jmsgs = _shortcut(plan, caps, f, base, m, owner_node)
+        st = dict(st)
+        st["cc_rounds"] = st["cc_rounds"] + 1
+        st["cc_msgs"] = st["cc_msgs"] + lax.psum(msgs + jmsgs, plan.pe_axes)
+        st["cc_undelivered"] = st["cc_undelivered"] + gund + jund + \
+            lax.psum(und, plan.pe_axes)
+        return f, fmask, n_hooked, it + 1, st
+
+    init = (f0, fmask0, jnp.int32(1), jnp.int32(0), stats)
+    f, fmask, changed, it, stats = lax.while_loop(cond, body, init)
+    # a nonzero `changed` at exit means the round budget ran out with
+    # hooks still firing — unconverged, retry with a doubled budget
+    stats = dict(stats)
+    stats["cc_unconverged"] = stats["cc_unconverged"] + changed
+    stats["forest_edges"] = lax.psum(
+        jnp.sum(fmask).astype(jnp.int32), plan.pe_axes)
+    return f, fmask, stats

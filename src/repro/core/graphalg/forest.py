@@ -1,0 +1,164 @@
+"""Euler tours of *unrooted* spanning forests (edge-list layout).
+
+``treealg.euler`` builds tours from a parent array — the orientation is
+an input. Here the forest arrives as the undirected edge marks that the
+hooking rounds produced (:func:`graphalg.cc.cc_rounds`), so the tour
+must be built from raw adjacency and the orientation *falls out of the
+ranking* (JáJá's tree-rooting technique): rank the tour cut at each
+component's root, and for every forest edge the arc traversed first is
+the parent→child direction.
+
+Arc layout: forest edge at global edge slot ``e`` owns the arc pair
+``2e`` (a→b) and ``2e+1`` (b→a) — arcs shard with the edges, twins are
+co-located, and ``owner(arc) = arc // (2 m_E)``. Construction is one
+:func:`exchange.request_reply` round, exactly the euler.py two-round
+discipline:
+
+  1. every forest edge reports ``(node, in_arc, out_arc)`` to each
+     endpoint's owner;
+  2. the owner groups the reports per node (pre-sort by *neighbor* id,
+     then the shared ``sort_and_group`` — giving each node the
+     ascending-neighbor circular adjacency order, i.e. treealg's
+     ascending-child sibling convention), links each in-arc to
+     the *next* out-arc around the node (wrapping), cuts the wrap at
+     component roots (``label == id`` — the min-id node) to make the
+     tour's terminal, flags the root's first out-arc as the tree's
+     start, and replies to the arc owners (in-arc and out-arc are
+     twins, one reply serves both).
+
+The tour successor array plus unit weights is a list-ranking instance
+over ``2 m_E`` arcs per PE; non-forest edges' arcs are weight-0
+self-loops (padding), so the instance shards perfectly regardless of
+how many edges won hooks. Capacities for both legs come from the exact
+endpoint histogram of the *full* edge list — a host-side upper bound
+for the forest subset, same discipline as ``treealg.euler.tour_caps``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.listrank import exchange as exchange_lib
+from repro.core.listrank.exchange import INT_MAX, MeshPlan
+from repro.core.graphalg.cc import GraphCaps
+
+
+def build_forest_tour(plan: MeshPlan, caps: GraphCaps, ea, eb, fmask,
+                      f, m: int, m_e: int):
+    """Device-side tour construction (runs under shard_map).
+
+    Args:
+      ea/eb: (m_e,) per-PE edge endpoints (global node ids).
+      fmask: (m_e,) spanning-forest marks from the hooking rounds.
+      f: (m,) converged component labels (roots are ``f[v] == v``).
+
+    Returns (succ, w_unit, first_mask, stats_local): the (2*m_e,) tour
+    successor and unit weights, the tree-start arc marks, and *local*
+    (un-psummed) {"sent", "leftover"} transport counters.
+    """
+    pe = plan.my_id().astype(jnp.int32)
+    base = pe * m
+    gid = base + jnp.arange(m, dtype=jnp.int32)
+    ebase = pe * m_e
+    eid = ebase + jnp.arange(m_e, dtype=jnp.int32)
+    is_root = f == gid
+    arc_gid = 2 * ebase + jnp.arange(2 * m_e, dtype=jnp.int32)
+
+    def owner_node(g):
+        return g // m
+
+    def owner_arc(a):
+        return a // (2 * m_e)
+
+    # one report per (forest edge, endpoint): the in-arc entering the
+    # endpoint, the out-arc leaving it, and the neighbor at the far end
+    node = jnp.concatenate([ea, eb]).astype(jnp.int32)
+    nbr = jnp.concatenate([eb, ea]).astype(jnp.int32)
+    ain = jnp.concatenate([2 * eid + 1, 2 * eid])
+    aout = jnp.concatenate([2 * eid, 2 * eid + 1])
+    rvalid = jnp.concatenate([fmask, fmask])
+
+    def reply_fn(dlv, dval):
+        nd, ai, ao = dlv["node"], dlv["ain"], dlv["aout"]
+        # canonical circular adjacency: ascending *neighbor id* per node
+        # (pre-sort by neighbor, then stable group by node — euler.py's
+        # single-sort discipline), so pre/postorder visit children in
+        # ascending-id order, the treealg convention. The forest never
+        # keeps parallel edges (a merged pair stops proposing), so the
+        # neighbor key is unique within a node's run.
+        orda = jnp.argsort(jnp.where(dval, dlv["nbr"], INT_MAX),
+                           stable=True)
+        nd_c, ai_c, ao_c, val_c = nd[orda], ai[orda], ao[orda], dval[orda]
+        order, skey, pos, newrun = exchange_lib.sort_and_group(
+            nd_c, val_c, INT_MAX)
+        ai_s, ao_s = ai_c[order], ao_c[order]
+        val_s = skey != INT_MAX
+        q = val_s.shape[0]
+        i = jnp.arange(q, dtype=jnp.int32)
+
+        # circular next: in-arc i links to the next entry's out-arc,
+        # wrapping the last entry of each run to the run's first
+        last = jnp.concatenate([newrun[1:], jnp.ones((1,), jnp.bool_)])
+        first_out = ao_s[i - pos]  # run start = i - pos
+        nxt = jnp.where(last, first_out,
+                        jnp.concatenate([ao_s[1:], ao_s[:1]]))
+        # cut at component roots: the wrap arc terminates the tour, and
+        # the root's first out-arc is the tree's start
+        nslot = jnp.clip(skey - base, 0, m - 1)
+        rooted = val_s & is_root[nslot]
+        cut = last & rooted
+        succ_val = jnp.where(cut, ai_s, nxt)
+        fflag = newrun & rooted
+        return ({"ain": ai_s, "succ": succ_val, "aout": ao_s,
+                 "fflag": fflag}, owner_arc(ai_s), val_s)
+
+    rdel, rval, _, rr_st = exchange_lib.request_reply(
+        plan, caps.tour, caps.tour,
+        {"node": node, "nbr": nbr, "ain": ain, "aout": aout},
+        owner_node(node).astype(jnp.int32), rvalid, reply_fn)
+
+    # receive: in-arc successors and tree-start flags (twin arcs are
+    # co-located, so one delivery serves both)
+    aslot = jnp.where(rval, rdel["ain"] - 2 * ebase, 2 * m_e)
+    succ = arc_gid.at[aslot].set(rdel["succ"], mode="drop")
+    oslot = jnp.where(rval & rdel["fflag"], rdel["aout"] - 2 * ebase,
+                      2 * m_e)
+    first_mask = jnp.zeros(2 * m_e, jnp.bool_).at[oslot].set(
+        True, mode="drop")
+    have = jnp.zeros(2 * m_e, jnp.bool_).at[aslot].set(True, mode="drop")
+
+    # every forest arc must have received its successor
+    expect = jnp.repeat(fmask, 2)
+    missing = jnp.sum(expect & ~have).astype(jnp.int32)
+    w_unit = (succ != arc_gid).astype(jnp.int32)
+    stats_local = {"sent": rr_st["sent"],
+                   "leftover": rr_st["leftover"] + missing}
+    return succ, w_unit, first_mask, stats_local
+
+
+def orient_forest(rank1, ea, eb, m_e: int):
+    """Per-edge orientation from the unit ranking: the arc with the
+    larger rank-to-terminal comes earlier in the tour and is the
+    parent→child traversal.
+
+    Returns (child, parent, r1_down, r1_up, down0) per local edge
+    slot, computed for *every* slot — callers gate on their forest
+    mask downstream; ``down0`` marks edges whose even arc (a→b) is
+    the downward one.
+    """
+    r = rank1.reshape(m_e, 2)
+    r0, r1 = r[:, 0], r[:, 1]
+    down0 = r0 > r1
+    child = jnp.where(down0, eb, ea).astype(jnp.int32)
+    parent = jnp.where(down0, ea, eb).astype(jnp.int32)
+    r1_down = jnp.where(down0, r0, r1)
+    r1_up = jnp.where(down0, r1, r0)
+    return child, parent, r1_down, r1_up, down0
+
+
+def pm_weights(succ, arc_gid, fmask, down0):
+    """±1 depth weights for the second solve: +1 on down-arcs, -1 on
+    up-arcs, 0 on terminals and non-forest self-loops."""
+    w_even = jnp.where(down0, jnp.int32(1), jnp.int32(-1))
+    w = jnp.stack([w_even, -w_even], axis=1).reshape(arc_gid.shape[0])
+    live = jnp.repeat(fmask, 2) & (succ != arc_gid)
+    return jnp.where(live, w, 0)

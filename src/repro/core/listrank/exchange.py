@@ -513,6 +513,51 @@ def compact_queue(entries: Sequence[tuple[dict[str, jax.Array], jax.Array,
 # request/response gather
 # --------------------------------------------------------------------------
 
+def request_reply(plan: MeshPlan, req_caps, resp_caps,
+                  payload: dict[str, jax.Array], dest: jax.Array,
+                  valid: jax.Array, reply_fn):
+    """Two-leg owner-computes exchange (request round + reply round).
+
+    Route ``payload`` to ``dest``; on the receiving PE, ``reply_fn``
+    turns the delivered batch into a reply batch with its *own*
+    addressing; route those replies and return them. This is the shared
+    shape of ``treealg.euler``'s report/reply tour construction and
+    ``graphalg``'s adjacency-linking round — unlike
+    :func:`remote_gather` (keyed fetch by target id, origin
+    reconstructed from receive rows), the owner computes both the reply
+    content and the reply destinations, typically after regrouping the
+    requests with :func:`sort_and_group`.
+
+    Args:
+      req_caps / resp_caps: per-hop mailbox capacities for the two legs
+        (int => replicated over hops).
+      reply_fn: (delivered_payload, delivered_valid) ->
+        (reply_payload, reply_dest, reply_valid[, aux]); ``aux`` is any
+        pytree of side outputs the owner derives while grouping (e.g.
+        per-local-node marks) and is returned through untouched.
+
+    Returns:
+      (reply_delivered, reply_valid, aux, stats) with ``aux`` None when
+      ``reply_fn`` returns a 3-tuple and ``stats = {"sent", "leftover"}``
+      summed over both legs (a nonzero leftover means a capacity
+      overflow somewhere; the caller must retry with larger caps).
+    """
+    def as_caps(c):
+        return list(c) if isinstance(c, (tuple, list)) \
+            else [c] * plan.indirection.depth
+
+    delivered, dval, _, st1 = route(plan, as_caps(req_caps), payload, dest,
+                                    valid)
+    out = reply_fn(delivered, dval)
+    rpl, rdest, rvalid = out[:3]
+    aux = out[3] if len(out) > 3 else None
+    rdel, rval, _, st2 = route(plan, as_caps(resp_caps), rpl,
+                               rdest.astype(jnp.int32), rvalid)
+    stats = {"sent": sum(st1["sent"] + st2["sent"]).astype(jnp.int32),
+             "leftover": st1["leftover"] + st2["leftover"]}
+    return rdel, rval, aux, stats
+
+
 def remote_gather(plan: MeshPlan, targets: jax.Array, valid: jax.Array,
                   owner_of: Callable[[jax.Array], jax.Array],
                   lookup_fn: Callable[[jax.Array, jax.Array], dict[str, jax.Array]],

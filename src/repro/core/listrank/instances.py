@@ -203,6 +203,81 @@ def gen_euler_tour(n_nodes: int, seed: int = 0, locality: bool = False,
     return _as_succ_dtype(succ), rank.astype(np.int32), arcs
 
 
+def gen_graph_edges(n_nodes: int, n_edges: int, seed: int = 0,
+                    locality: bool = False,
+                    num_components: int = 1) -> np.ndarray:
+    """Random undirected edge list with a controlled component count
+    (the ``repro.core.graphalg`` input families).
+
+    Nodes split into ``num_components`` contiguous blocks; each block
+    gets a random spanning tree (the same two attachment models as
+    :func:`gen_tree_parents`: uniform = GNM-BFS-like, windowed =
+    RGG2D-like) plus ``n_edges - (n_nodes - num_components)`` extra
+    random intra-block edges, so the edge list has *exactly*
+    ``num_components`` connected components. ``locality=True`` draws
+    every edge between index-close nodes, mimicking an RGG2D graph's
+    block-distribution locality. Fully vectorized; RNG discipline
+    matches the list generators (one ``default_rng(seed)`` stream,
+    extra-edge draws strictly after the tree draws).
+
+    Returns an ``(n_edges, 2)`` int64 array in randomized order and
+    orientation (self-loops never occur, parallel edges may).
+    """
+    if n_nodes <= 0:
+        raise ValueError("n_nodes must be positive")
+    if not 1 <= num_components <= n_nodes:
+        raise ValueError("num_components must be in [1, n_nodes]")
+    tree_edges = n_nodes - num_components
+    if n_edges < tree_edges:
+        raise ValueError(
+            f"n_edges={n_edges} cannot connect {n_nodes} nodes into "
+            f"{num_components} components (need >= {tree_edges})")
+    rng = np.random.default_rng(seed)
+    bounds = np.linspace(0, n_nodes, num_components + 1).astype(np.int64)
+    starts, ends = bounds[:-1], bounds[1:]
+    # block id and block start per node (blocks are contiguous)
+    blk = np.searchsorted(ends, np.arange(n_nodes), side="right")
+    lo_of = starts[blk]
+    hi_of = ends[blk]
+
+    edges = np.empty((n_edges, 2), dtype=np.int64)
+    # spanning trees: node i attaches to a strictly-earlier node of its
+    # own block (so block starts are the roots) — uniform over the
+    # block prefix, or over a trailing window for the RGG2D-like model.
+    child = np.arange(n_nodes)[np.arange(n_nodes) != lo_of]
+    lo = lo_of[child]
+    if locality:
+        window = max(1, n_nodes // 64)
+        lo = np.maximum(lo, child - window)
+    edges[:tree_edges, 0] = child
+    edges[:tree_edges, 1] = lo + (rng.random(tree_edges)
+                                  * (child - lo)).astype(np.int64)
+    # extra edges: first endpoint uniform over non-singleton blocks,
+    # second a distinct node of the same block (windowed if locality)
+    extra = n_edges - tree_edges
+    if extra:
+        cand = np.arange(n_nodes)[(hi_of - lo_of) > 1]
+        if cand.size == 0:
+            raise ValueError("extra edges require a block with >= 2 nodes")
+        u = cand[rng.integers(0, cand.size, size=extra)]
+        lo2, hi2 = lo_of[u], hi_of[u]
+        if locality:
+            window = max(1, n_nodes // 64)
+            lo2 = np.maximum(lo2, u - window)
+            hi2 = np.minimum(hi2, u + window + 1)
+        # draw from the block minus u itself: sample [lo2, hi2-1) and
+        # shift values >= u up by one
+        v = lo2 + (rng.random(extra) * (hi2 - lo2 - 1)).astype(np.int64)
+        v = np.where(v >= u, v + 1, v)
+        edges[tree_edges:, 0] = u
+        edges[tree_edges:, 1] = v
+    # randomized order and orientation (inputs must not leak the
+    # construction's child->parent structure)
+    flip = rng.random(n_edges) < 0.5
+    edges[flip] = edges[flip, ::-1]
+    return edges[rng.permutation(n_edges)]
+
+
 def pad_to_multiple(succ: np.ndarray, rank: np.ndarray, p: int):
     """Pad with self-loop singletons so n is divisible by p."""
     n = succ.shape[0]

@@ -50,3 +50,53 @@ def collective_counts(fn: Callable, *args, **kwargs) -> dict[str, int]:
     jaxpr = jax.make_jaxpr(fn, **kwargs)(*args)
     counts = count_primitives(jaxpr)
     return {k: v for k, v in counts.items() if k in COLLECTIVE_PRIMS}
+
+
+def _aval_bytes(var) -> int:
+    aval = var.aval
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    out = dtype.itemsize
+    for d in shape:
+        out *= int(d)
+    return out
+
+
+def payload_bytes(jaxpr) -> dict[str, int]:
+    """Per-collective-primitive payload bytes of a (closed) jaxpr.
+
+    Sums the operand (invar) aval sizes of every collective eqn,
+    recursing into nested jaxprs exactly like :func:`count_primitives`.
+    Collective *count* alone cannot distinguish "one packed
+    ``all_to_all``" from "one ``all_to_all`` that grew a second hidden
+    word-plane"; counting operand bytes pins the wire-format volume
+    too — each packed hop must ship exactly ``width * hop_size * cap``
+    int32 words and nothing else.
+    """
+    out: dict[str, int] = {}
+
+    def visit(jx):
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if name in COLLECTIVE_PRIMS:
+                out[name] = out.get(name, 0) + sum(
+                    _aval_bytes(v) for v in eqn.invars)
+            for v in eqn.params.values():
+                for sub in _sub_jaxprs(v):
+                    visit(sub)
+
+    visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return out
+
+
+def collective_footprint(fn: Callable, *args, **kwargs) -> dict[str, tuple]:
+    """Trace ``fn(*args)`` and report ``{prim: (count, payload_bytes)}``
+    for every collective primitive in the program — the §2.6 model's
+    two levers (startups and volume) from one trace."""
+    jaxpr = jax.make_jaxpr(fn, **kwargs)(*args)
+    counts = count_primitives(jaxpr)
+    bytes_ = payload_bytes(jaxpr)
+    return {k: (counts[k], bytes_.get(k, 0))
+            for k in counts if k in COLLECTIVE_PRIMS}

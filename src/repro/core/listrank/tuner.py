@@ -155,24 +155,38 @@ class CapacityScales:
 
     ``chase`` scales the chase-phase mailbox and queue capacities,
     ``sub`` the recursion sub-store, ``gather`` the remote-gather
-    request/response mailboxes. All 1.0 on the first attempt.
+    request/response mailboxes, ``graph`` the graphalg hooking-round
+    capacities (label/jump gathers, hook proposals and confirmations,
+    adjacency reports, and the hooking-round budget itself — see
+    ``graphalg.cc.GraphCaps.scaled``). All 1.0 on the first attempt.
     """
     chase: float = 1.0
     sub: float = 1.0
     gather: float = 1.0
+    graph: float = 1.0
 
 
 #: fatal stat -> the capacity families whose overflow it signals.
 #: ``store_miss`` has no capacity interpretation (it indicates routing
 #: to the wrong owner), so it conservatively rescales everything.
+#: The ``cc_*``/``tour_*``/``stats_*`` keys are the graphalg hooking
+#: pipeline's overflow stats: destinations there follow the *dynamic*
+#: label structure (hotspots concentrate on small labels), so their
+#: caps are slack-based rather than host-exact and re-double under the
+#: dedicated ``graph`` family; ``cc_unconverged`` additionally doubles
+#: the hooking-round budget through the same scale.
 FAMILY_OF = {
     "dropped": ("chase",),
     "sub_overflow": ("sub",),
     "undelivered": ("gather",),
     "store_miss": ("chase", "sub", "gather"),
+    "cc_undelivered": ("graph",),
+    "cc_unconverged": ("graph",),
+    "tour_undelivered": ("graph",),
+    "stats_undelivered": ("graph",),
 }
 
-_ALL_FAMILIES = ("chase", "sub", "gather")
+_ALL_FAMILIES = ("chase", "sub", "gather", "graph")
 
 #: stats that are NOT capacity-exclusive: ``undelivered`` also captures
 #: chase coverage failures (restart-loop stragglers) and chase-mailbox

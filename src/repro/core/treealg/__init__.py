@@ -14,8 +14,9 @@ that application layer:
   one jitted mesh solve.
 """
 from repro.core.treealg.euler import build_tour, oracle_tour, tour_caps
-from repro.core.treealg.ops import (TreeStats, node_depth, postorder,
-                                    preorder, root_tree, roots_and_sizes,
+from repro.core.treealg.ops import (TreeStats, is_ancestor, node_depth,
+                                    postorder, preorder, root_tree,
+                                    roots_and_sizes, subtree_interval,
                                     subtree_size, tree_stats)
 from repro.core.treealg.batch import (pack_instances, rank_lists,
                                       rank_lists_with_stats, solve_forest,
@@ -23,8 +24,9 @@ from repro.core.treealg.batch import (pack_instances, rank_lists,
 
 __all__ = [
     "build_tour", "oracle_tour", "tour_caps",
-    "TreeStats", "node_depth", "postorder", "preorder", "root_tree",
-    "roots_and_sizes", "subtree_size", "tree_stats",
+    "TreeStats", "is_ancestor", "node_depth", "postorder", "preorder",
+    "root_tree", "roots_and_sizes", "subtree_interval", "subtree_size",
+    "tree_stats",
     "pack_instances", "rank_lists", "rank_lists_with_stats",
     "solve_forest", "unpack_results",
 ]

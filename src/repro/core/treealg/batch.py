@@ -28,6 +28,24 @@ from repro.core.listrank import instances
 from repro.core.listrank.api import rank_list_with_stats
 from repro.core.listrank.config import ListRankConfig
 
+#: largest packed id the offset relabeling may produce. Ids ride the
+#: int32 wire format, and the driver pads the packed instance up to a
+#: PE multiple *after* packing, so leave 2^16 headroom below 2^31-1
+#: instead of wrapping silently at the ``astype(np.int32)``.
+PACKED_ID_LIMIT = 2**31 - 2**16
+
+
+def _check_packed_size(total: int, what: str, limit: int = PACKED_ID_LIMIT):
+    """Host-side int32-overflow guard for offset relabeling: ``total``
+    is the largest id the packed instance can produce (before PE
+    padding). Runs on shapes only — callers invoke it before touching
+    any element data."""
+    if total > limit:
+        raise ValueError(
+            f"{what}: packed instance needs ids up to {total}, which "
+            f"overflows the int32 wire format (limit {limit} with "
+            f"PE-padding headroom); split the batch")
+
 
 def pack_instances(batch: Sequence[tuple[np.ndarray, np.ndarray]]):
     """Offset-relabel and concatenate B (succ, rank) instances.
@@ -40,6 +58,9 @@ def pack_instances(batch: Sequence[tuple[np.ndarray, np.ndarray]]):
     if not batch:
         raise ValueError("empty instance batch")
     sizes = np.array([np.asarray(s).shape[0] for s, _ in batch], np.int64)
+    # shape-only overflow check BEFORE any elementwise validation: the
+    # relabeled ids must fit the int32 wire format
+    _check_packed_size(int(sizes.sum()), "pack_instances")
     for b, (s, r) in enumerate(batch):
         s = np.asarray(s)
         if np.asarray(r).shape != s.shape:
@@ -115,10 +136,15 @@ def solve_forest(parents: Sequence[np.ndarray], mesh, pe_axes=None,
     :class:`~repro.core.treealg.ops.TreeStats` back per tree.
     """
     from repro.core.treealg import ops
-    parents = [np.asarray(jax.device_get(q)).astype(np.int64)
-               for q in parents]
     if not parents:
         raise ValueError("empty forest batch")
+    # shape-only overflow guard BEFORE any conversion touches element
+    # data: arc ids of the packed forest's tour reach 2 * n_packed
+    _check_packed_size(
+        2 * sum(q.shape[0] if hasattr(q, "shape") else len(q)
+                for q in parents), "solve_forest")
+    parents = [np.asarray(jax.device_get(q)).astype(np.int64)
+               for q in parents]
     for b, q in enumerate(parents):
         # validate per tree BEFORE packing: an out-of-range parent
         # would become a valid pointer into a neighbor's id window

@@ -86,44 +86,43 @@ def _build_sharded(parent, cut, *, plan: MeshPlan, m: int, child_cap: int,
     def owner_of(g):
         return g // m
 
-    caps1 = [child_cap] * plan.indirection.depth
-    caps2 = [reply_cap] * plan.indirection.depth
+    def reply_fn(delivered, dval):
+        # adjacency runs: one pre-sort by child id, then the shared
+        # sort_and_group stably groups by parent — within each parent's
+        # run the children are ascending, i.e. the tour's adjacency
+        # order.
+        ch, par = delivered["child"], delivered["parent"]
+        ordc = jnp.argsort(jnp.where(dval, ch, INT_MAX), stable=True)
+        ch_c, par_c, val_c = ch[ordc], par[ordc], dval[ordc]
+        order, skey, _, newrun = exchange_lib.sort_and_group(par_c, val_c,
+                                                            INT_MAX)
+        ch_s = ch_c[order]
+        val_s = skey != INT_MAX
 
-    # round 1: children report to their parent's owner
-    delivered, dval, _, st1 = exchange_lib.route(
-        plan, caps1, {"child": gid, "parent": q},
-        owner_of(q).astype(jnp.int32), nonroot)
+        # first child of each local node: the run starts, scattered by
+        # the (local) parent id. skey of a valid run is owned here by
+        # routing.
+        pslot = jnp.where(val_s, skey - base, m)
+        fc = jnp.full(m, -1, jnp.int32).at[
+            jnp.where(newrun & val_s, pslot, m)].set(ch_s, mode="drop")
+        # next sibling: the following sorted row, if in the same run
+        has_next = jnp.concatenate([~newrun[1:], jnp.zeros((1,), jnp.bool_)])
+        ns_row = jnp.where(
+            has_next,
+            jnp.concatenate([ch_s[1:], jnp.full((1,), -1, jnp.int32)]), -1)
+        pslot_c = jnp.clip(pslot, 0, m - 1)
+        par_root = val_s & is_root[pslot_c]
+        par_fc = fc[pslot_c]
+        # reply (next sibling, parent-is-root, parent's first child) to
+        # each child's owner
+        return ({"child": ch_s, "ns": ns_row, "proot": par_root,
+                 "pfc": par_fc}, owner_of(ch_s), val_s, fc)
 
-    # adjacency runs: one pre-sort by child id, then the shared
-    # sort_and_group stably groups by parent — within each parent's run
-    # the children are ascending, i.e. the tour's adjacency order.
-    ch, par = delivered["child"], delivered["parent"]
-    ordc = jnp.argsort(jnp.where(dval, ch, INT_MAX), stable=True)
-    ch_c, par_c, val_c = ch[ordc], par[ordc], dval[ordc]
-    order, skey, _, newrun = exchange_lib.sort_and_group(par_c, val_c, INT_MAX)
-    ch_s = ch_c[order]
-    val_s = skey != INT_MAX
-
-    # first child of each local node: the run starts, scattered by the
-    # (local) parent id. skey of a valid run is owned here by routing.
-    pslot = jnp.where(val_s, skey - base, m)
-    fc = jnp.full(m, -1, jnp.int32).at[
-        jnp.where(newrun & val_s, pslot, m)].set(ch_s, mode="drop")
-    # next sibling: the following sorted row, if it is in the same run
-    has_next = jnp.concatenate([~newrun[1:], jnp.zeros((1,), jnp.bool_)])
-    ns_row = jnp.where(
-        has_next, jnp.concatenate([ch_s[1:], jnp.full((1,), -1, jnp.int32)]),
-        -1)
-    pslot_c = jnp.clip(pslot, 0, m - 1)
-    par_root = val_s & is_root[pslot_c]
-    par_fc = fc[pslot_c]
-
-    # round 2: reply (next sibling, parent-is-root, parent's first
-    # child) to each child's owner
-    rdel, rval, _, st2 = exchange_lib.route(
-        plan, caps2,
-        {"child": ch_s, "ns": ns_row, "proot": par_root, "pfc": par_fc},
-        owner_of(ch_s).astype(jnp.int32), val_s)
+    # children report to their parent's owner; the owner groups them
+    # into adjacency runs and replies (exchange.request_reply).
+    rdel, rval, fc, rr_st = exchange_lib.request_reply(
+        plan, child_cap, reply_cap, {"child": gid, "parent": q},
+        owner_of(q).astype(jnp.int32), nonroot, reply_fn)
     rslot = jnp.where(rval, rdel["child"] - base, m)
     ns = jnp.full(m, -1, jnp.int32).at[rslot].set(rdel["ns"], mode="drop")
     proot = jnp.zeros(m, jnp.bool_).at[rslot].set(rdel["proot"], mode="drop")
@@ -154,9 +153,8 @@ def _build_sharded(parent, cut, *, plan: MeshPlan, m: int, child_cap: int,
 
     missing = jnp.sum(nonroot & ~have).astype(jnp.int32)
     stats = {"tour_undelivered": lax.psum(
-        missing + st1["leftover"] + st2["leftover"], plan.pe_axes),
-        "tour_msgs": lax.psum(
-            sum(st1["sent"] + st2["sent"]).astype(jnp.int32), plan.pe_axes)}
+        missing + rr_st["leftover"], plan.pe_axes),
+        "tour_msgs": lax.psum(rr_st["sent"], plan.pe_axes)}
     return succ, w, stats
 
 

@@ -53,6 +53,45 @@ class TreeStats:
     def n_nodes(self) -> int:
         return self.parent.shape[0]
 
+    def is_ancestor(self, u, v) -> np.ndarray:
+        """True iff ``u`` is an (inclusive) ancestor of ``v`` — the
+        closed-form pre/postorder interval test, no solves."""
+        return is_ancestor(self.preorder, self.postorder, self.root_of,
+                           u, v)
+
+    def subtree_interval(self, u):
+        """Preorder interval [lo, hi] covered by ``u``'s subtree."""
+        return subtree_interval(self.preorder, self.subtree_size, u)
+
+
+def is_ancestor(preorder, postorder, root_of, u, v) -> np.ndarray:
+    """Closed-form ancestor test from pre/postorder numbers.
+
+    ``u`` is an ancestor of ``v`` (every node is its own ancestor) iff
+    they share a tree and ``v``'s DFS visit nests inside ``u``'s:
+    ``pre[u] <= pre[v]`` and ``post[v] <= post[u]``. Pre/postorder are
+    0-based *per tree*, so the same-tree check (``root_of`` — or a
+    component labeling) is part of the test. Vectorizes over ``u``/``v``
+    (numpy broadcasting); used by both :meth:`TreeStats.is_ancestor`
+    and the graphalg query layer. No communication — pure arithmetic.
+    """
+    u = np.asarray(u)
+    v = np.asarray(v)
+    preorder = np.asarray(preorder)
+    postorder = np.asarray(postorder)
+    root_of = np.asarray(root_of)
+    return (root_of[u] == root_of[v]) & (preorder[u] <= preorder[v]) \
+        & (postorder[v] <= postorder[u])
+
+
+def subtree_interval(preorder, subtree_size, u):
+    """The preorder numbers of ``u``'s subtree form the contiguous
+    interval ``[pre[u], pre[u] + size[u] - 1]`` (per tree) — returns
+    (lo, hi), vectorized over ``u``."""
+    u = np.asarray(u)
+    lo = np.asarray(preorder)[u]
+    return lo, lo + np.asarray(subtree_size)[u] - 1
+
 
 def roots_and_sizes(parent: np.ndarray):
     """(root_of, tree_size_of) per node, by vectorized pointer jumping

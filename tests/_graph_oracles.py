@@ -1,0 +1,68 @@
+"""Host-side graph oracles shared by the graphalg tests: a plain
+union-find for connectivity, plus spanning-forest validation (the
+forest must use real graph edges, be acyclic, and span exactly the
+union-find components)."""
+import numpy as np
+
+
+def union_find_labels(n: int, edges) -> np.ndarray:
+    """Canonical component labels (minimum member id) by union-find.
+
+    Unions always hang the larger root under the smaller, so the root
+    of every set is its minimum element — the same canonical labeling
+    graphalg's min-label hooking converges to.
+    """
+    parent = np.arange(n, dtype=np.int64)
+
+    def find(x):
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:
+            parent[x], x = root, parent[x]
+        return root
+
+    for a, b in np.asarray(edges, dtype=np.int64):
+        ra, rb = find(int(a)), find(int(b))
+        if ra != rb:
+            parent[max(ra, rb)] = min(ra, rb)
+    return np.array([find(v) for v in range(n)], dtype=np.int64)
+
+
+def check_spanning_forest(n: int, edges, parent, labels) -> list[str]:
+    """Validate an oriented spanning forest against the edge list.
+
+    Returns a list of failure descriptions (empty = valid): every
+    non-root parent link must be a real graph edge, each component must
+    be rooted exactly at its minimum node id, the forest must be
+    acyclic, and each tree must span its union-find component.
+    """
+    parent = np.asarray(parent, dtype=np.int64)
+    labels = np.asarray(labels, dtype=np.int64)
+    ref = union_find_labels(n, edges)
+    errs = []
+    if not np.array_equal(labels, ref):
+        errs.append("labels != union-find labels")
+    eset = {frozenset((int(a), int(b)))
+            for a, b in np.asarray(edges, dtype=np.int64) if a != b}
+    nodes = np.arange(n)
+    nonroot = parent != nodes
+    for v in nodes[nonroot]:
+        if frozenset((int(v), int(parent[v]))) not in eset:
+            errs.append(f"parent[{v}]={parent[v]} is not a graph edge")
+            break
+    if not np.array_equal(np.flatnonzero(~nonroot), np.unique(ref)):
+        errs.append("roots != component minima")
+    # acyclicity + spanning: every node must reach its component's
+    # root in < n steps
+    for v in range(n):
+        w, steps = v, 0
+        while parent[w] != w and steps <= n:
+            w, steps = parent[w], steps + 1
+        if steps > n:
+            errs.append(f"cycle reachable from node {v}")
+            break
+        if w != ref[v]:
+            errs.append(f"node {v} reaches root {w}, expected {ref[v]}")
+            break
+    return errs

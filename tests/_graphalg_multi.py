@@ -1,0 +1,92 @@
+"""Subprocess body for multi-PE graphalg tests (8 virtual devices).
+
+Run as: python tests/_graphalg_multi.py — exits nonzero on any mismatch
+against the union-find / DFS oracles. Must set XLA_FLAGS before jax.
+The acceptance matrix: connected_components and spanning_forest
+oracle-match a host union-find on GNM, RGG2D-like, multi-component and
+single-edge/empty-graph instances on the 8-PE mesh, and graph_stats
+matches per-node DFS recomputation end to end.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from _graph_oracles import check_spanning_forest, union_find_labels  # noqa: E402
+from _tree_oracles import dfs_stats  # noqa: E402
+from repro import compat  # noqa: E402
+from repro.core import graphalg  # noqa: E402
+from repro.core.listrank import ListRankConfig, instances  # noqa: E402
+
+
+def main():
+    mesh = compat.make_mesh((2, 4), ("row", "col"))
+    cfg = ListRankConfig(srs_rounds=1, local_contraction=True)
+    failures = 0
+
+    def check(name, ok):
+        nonlocal failures
+        print(("OK  " if ok else "FAIL") + f" {name}")
+        failures += 0 if ok else 1
+
+    families = [
+        ("gnm", 240, 400, dict(locality=False)),
+        ("rgg2d", 240, 400, dict(locality=True)),
+        ("gnm multi", 200, 260, dict(locality=False, num_components=6)),
+        ("rgg2d multi", 200, 260, dict(locality=True, num_components=4)),
+        ("single edge", 9, None, np.array([[7, 2]], np.int64)),
+        ("empty", 16, None, np.zeros((0, 2), np.int64)),
+    ]
+    for name, n, e, kw in families:
+        edges = (instances.gen_graph_edges(n, e, seed=len(name), **kw)
+                 if e is not None else kw)
+        ref = union_find_labels(n, edges)
+        labels, st = graphalg.connected_components(edges, n, mesh, cfg=cfg)
+        check(f"cc {name}", np.array_equal(labels, ref)
+              and st["cc_unconverged"] == 0)
+        parent, lab2, st2 = graphalg.spanning_forest(edges, n, mesh,
+                                                     cfg=cfg)
+        errs = check_spanning_forest(n, edges, parent, lab2)
+        check(f"forest {name}", errs == [] and
+              st2["forest_edges"] == n - np.unique(ref).size)
+        if errs:
+            print("   ", errs[0])
+
+    # graph_stats end to end on the 8-PE mesh, incl. the query layer
+    for name, n, e, kw in [("gnm", 220, 360, dict(locality=False)),
+                           ("rgg2d multi", 180, 230,
+                            dict(locality=True, num_components=5))]:
+        edges = instances.gen_graph_edges(n, e, seed=5 + len(name), **kw)
+        gs = graphalg.graph_stats(edges, n, mesh, cfg=cfg)
+        depth, size, pre, post = dfs_stats(gs.parent)
+        ok = (check_spanning_forest(n, edges, gs.parent,
+                                    gs.components) == []
+              and np.array_equal(gs.depth, depth)
+              and np.array_equal(gs.subtree_size, size)
+              and np.array_equal(gs.preorder, pre)
+              and np.array_equal(gs.postorder, post))
+        # spot-check the ancestor layer against parent walking
+        rng = np.random.default_rng(1)
+        us = rng.integers(0, n, 64)
+        vs = rng.integers(0, n, 64)
+        for u, v in zip(us, vs):
+            w, anc = int(v), False
+            while True:
+                if w == u:
+                    anc = True
+                    break
+                if gs.parent[w] == w:
+                    break
+                w = int(gs.parent[w])
+            ok = ok and bool(gs.is_ancestor(u, v)) == anc
+        check(f"graph_stats {name}", ok)
+
+    print("failures:", failures)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -264,6 +264,116 @@ def test_route_rejects_reserved_payload_keys():
               jnp.zeros(4, jnp.int32), jnp.ones(4, bool), track_src=True)
 
 
+# ----------------------------------------------------- request / reply
+def test_request_reply_owner_computed_addressing():
+    """request_reply: the owner regroups the delivered batch and
+    addresses its own replies (the euler.py / graphalg round shape).
+    p=1 self-sends make the data flow fully checkable."""
+    from repro.core.listrank.exchange import request_reply
+    plan = plan1()
+    q = 16
+    slot = jnp.arange(q, dtype=jnp.int32)
+    val = jnp.asarray(np.random.default_rng(0).integers(0, 50, q),
+                      jnp.int32)
+    valid = slot % 3 != 0
+
+    def reply_fn(dlv, dval):
+        # owner doubles the value and addresses the requester's slot
+        aux = jnp.sum(dval).astype(jnp.int32)
+        return ({"slot": dlv["slot"], "twice": 2 * dlv["val"]},
+                jnp.zeros_like(dlv["slot"]), dval, aux)
+
+    def fn(slot, val, valid):
+        rdel, rval, aux, st = request_reply(
+            plan, 16, 16, {"slot": slot, "val": val},
+            jnp.zeros(q, jnp.int32), valid, reply_fn)
+        out = jnp.zeros(q, jnp.int32).at[
+            jnp.where(rval, rdel["slot"], q)].set(rdel["twice"],
+                                                  mode="drop")
+        return out, aux, st["leftover"], st["sent"]
+
+    m = compat.shard_map(fn, mesh1(),
+                         in_specs=(P("pe"), P("pe"), P("pe")),
+                         out_specs=(P("pe"), P(), P(), P()),
+                         check_vma=False)
+    out, aux, leftover, sent = m(slot, val, valid)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.where(np.asarray(valid), 2 * np.asarray(val),
+                                  0))
+    assert int(aux) == int(np.sum(np.asarray(valid)))  # aux passthrough
+    assert int(leftover) == 0
+    assert int(sent) == 2 * int(np.sum(np.asarray(valid)))
+    # the two legs cost exactly one packed collective each
+    counts = introspect.collective_counts(m, slot, val, valid)
+    assert counts.get("all_to_all", 0) == 2
+
+
+# ------------------------------------------------- payload accounting
+def test_route_collective_payload_bytes_exact():
+    """The coalescing invariant, sharpened: the packed hop's single
+    all_to_all must ship exactly width * hop_size * cap int32 words —
+    per-collective payload bytes catch a hidden extra word-plane that
+    the op count alone would miss."""
+    q, cap = 8, 8
+    payload = _payload(q)
+    keys = sorted(payload.keys())
+    plan = plan1()
+
+    def fn(*leaves):
+        pl = dict(zip(keys, leaves[:-2]))
+        d, dv, _, _ = route(plan, [cap], pl, leaves[-2], leaves[-1])
+        return d, dv
+
+    args = [payload[k] for k in keys] + [
+        jnp.zeros(q, jnp.int32), jnp.ones(q, bool)]
+    m = compat.shard_map(fn, mesh1(),
+                         in_specs=tuple(P("pe") for _ in args),
+                         out_specs=({k: P("pe") for k in keys}, P("pe")))
+    fp = introspect.collective_footprint(m, *args)
+    width = WireFormat.for_leaves(
+        {**{k: payload[k].dtype for k in keys}, "_dest": jnp.int32}).width
+    assert fp["all_to_all"] == (1, width * 1 * cap * 4), fp
+
+
+#: (all_to_all count, all_to_all payload bytes) of the fixed solve
+#: config below — the committed coalescing baseline. The count is the
+#: number of packed hops the traced program contains (while_loop bodies
+#: count once); the bytes are their summed wire matrices. Both are
+#: functions of our routing code and the host-derived capacities only,
+#: so any change here is a real change to the wire protocol.
+PINNED_SOLVE_FOOTPRINT = (9, 59200)
+
+
+def solve_footprint(n, mesh, cfg):
+    """Collective (count, bytes) footprint of the traced solver
+    program for an n-element instance (test_treealg pins counts only;
+    this adds the payload-volume dimension)."""
+    import functools
+    from repro.core.listrank import api as api_lib
+    plan = MeshPlan.from_mesh(mesh, ("pe",), None,
+                              wire_packing=cfg.wire_packing)
+    specs = api_lib.build_specs(cfg, plan, n // plan.p, n, term_bound=8)
+    fn = functools.partial(api_lib._solve_sharded, plan=plan, cfg=cfg,
+                           specs=specs, m=n // plan.p)
+    m = compat.shard_map(fn, mesh, in_specs=(P("pe"), P("pe"), P()),
+                         out_specs=(P("pe"), P("pe"), P()),
+                         check_vma=False)
+    succ = jnp.arange(n, dtype=jnp.int32)
+    rank = jnp.zeros(n, jnp.int32)
+    return introspect.collective_footprint(m, succ, rank, jnp.int32(0))
+
+
+def test_solver_collective_footprint_pinned():
+    """Count AND bytes of one fixed solve config, pinned: the solver's
+    mesh program must not grow a collective or a hidden word-plane
+    without this test noticing — a sharper guard on the coalescing
+    invariant than the op count alone."""
+    from repro.core.listrank.config import ListRankConfig
+    cfg = ListRankConfig(srs_rounds=1, local_contraction=False)
+    fp = solve_footprint(256, mesh1(), cfg)
+    assert fp["all_to_all"] == PINNED_SOLVE_FOOTPRINT, fp
+
+
 # ------------------------------------------------------- mailbox kernel
 def test_mailbox_pack_pallas_matches_ref():
     rng = np.random.default_rng(8)

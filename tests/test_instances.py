@@ -253,6 +253,53 @@ def test_forest_rng_stream_backward_compatible():
 
 
 # --------------------------------------------------------------------------
+# edge-list generators (graphalg input families)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,e,locality,k,seed", [
+    (40, 60, False, 1, 0), (40, 60, True, 1, 1),
+    (50, 55, False, 5, 2), (50, 55, True, 3, 3),
+    (12, 11, False, 1, 4), (16, 8, False, 8, 5), (7, 0, True, 7, 6),
+])
+def test_gen_graph_edges_component_count(n, e, locality, k, seed):
+    """Oracle check against a host union-find: exactly the requested
+    component count, every endpoint in range, no self-loops."""
+    from _graph_oracles import union_find_labels
+    edges = instances.gen_graph_edges(n, e, seed=seed, locality=locality,
+                                      num_components=k)
+    assert edges.shape == (e, 2)
+    if e:
+        assert ((edges >= 0) & (edges < n)).all()
+        assert (edges[:, 0] != edges[:, 1]).all()
+    labels = union_find_labels(n, edges)
+    assert np.unique(labels).size == k
+
+
+def test_gen_graph_edges_locality():
+    """The RGG2D-like model must give the block distribution a real
+    locality edge over GNM (that is its entire point)."""
+    n, e, p = 1 << 12, 1 << 13, 16
+    m = n // p
+    def cross_fraction(edges):
+        return float(np.mean(edges[:, 0] // m != edges[:, 1] // m))
+    gnm = instances.gen_graph_edges(n, e, seed=0, locality=False)
+    rgg = instances.gen_graph_edges(n, e, seed=0, locality=True)
+    assert cross_fraction(rgg) < 0.2 < cross_fraction(gnm)
+
+
+def test_gen_graph_edges_deterministic_and_validates():
+    np.testing.assert_array_equal(
+        instances.gen_graph_edges(30, 50, seed=7, num_components=2),
+        instances.gen_graph_edges(30, 50, seed=7, num_components=2))
+    with pytest.raises(ValueError, match="cannot connect"):
+        instances.gen_graph_edges(10, 5, num_components=1)
+    with pytest.raises(ValueError, match="num_components"):
+        instances.gen_graph_edges(4, 10, num_components=5)
+    with pytest.raises(ValueError, match="n_nodes"):
+        instances.gen_graph_edges(0, 0)
+
+
+# --------------------------------------------------------------------------
 # structural sanity at a size the loop version could not handle quickly
 # --------------------------------------------------------------------------
 
@@ -268,3 +315,7 @@ def test_generators_scale():
     # the tour visits every arc exactly once: ranks on the single list
     # reaching the root-return arc form a permutation prefix
     assert np.sum(s == np.arange(n_arcs)) == 1
+    # edge generator at scale: one vectorized pass
+    edges = instances.gen_graph_edges(n // 4, n // 2, seed=3, locality=True,
+                                      num_components=16)
+    assert edges.shape == (n // 2, 2) and (edges[:, 0] != edges[:, 1]).all()

@@ -27,3 +27,13 @@ def test_treealg_multi_device():
     print(proc.stdout)
     print(proc.stderr[-2000:] if proc.stderr else "")
     assert proc.returncode == 0, "multi-device treealg matrix failed"
+
+
+@pytest.mark.slow
+def test_graphalg_multi_device():
+    script = pathlib.Path(__file__).parent / "_graphalg_multi.py"
+    proc = subprocess.run([sys.executable, str(script)],
+                          capture_output=True, text=True, timeout=2400)
+    print(proc.stdout)
+    print(proc.stderr[-2000:] if proc.stderr else "")
+    assert proc.returncode == 0, "multi-device graphalg matrix failed"

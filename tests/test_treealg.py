@@ -200,6 +200,55 @@ def test_batch_rejects_out_of_range_ids():
                              mesh1(), cfg=CFG)
 
 
+def test_pack_instances_int32_overflow_guard():
+    """Offset relabeling must refuse batches whose packed ids would
+    wrap int32 — checked on shapes BEFORE any elementwise work, so the
+    boundary case costs no memory (broadcast views carry no data)."""
+    big = np.broadcast_to(np.int32(0), (1 << 29,))
+    zeros = np.broadcast_to(np.int32(0), (1 << 29,))
+    with pytest.raises(ValueError, match="overflows the int32"):
+        treealg.pack_instances([(big, zeros)] * 4)  # 2^31 ids
+    # the guard threshold itself, exactly at the boundary
+    limit = batch_lib.PACKED_ID_LIMIT
+    batch_lib._check_packed_size(limit, "t")  # fits
+    with pytest.raises(ValueError, match="split the batch"):
+        batch_lib._check_packed_size(limit + 1, "t")
+    # solve_forest guards the *arc* id space (2x the packed nodes)
+    with pytest.raises(ValueError, match="overflows the int32"):
+        treealg.solve_forest([np.broadcast_to(np.int64(0), (1 << 30,))],
+                             mesh1(), cfg=CFG)
+
+
+def test_is_ancestor_and_subtree_interval():
+    """Closed-form ancestor/interval queries from pre/postorder —
+    checked against explicit parent walking on a forest."""
+    parent = gen_tree_parents(70, seed=13, num_trees=3)
+    st = treealg.tree_stats(parent, mesh1(), cfg=CFG)
+    n = st.n_nodes
+    ref = np.zeros((n, n), bool)
+    for x in range(n):
+        w = x
+        while True:
+            ref[w, x] = True
+            if parent[w] == w:
+                break
+            w = int(parent[w])
+    got = st.is_ancestor(np.arange(n)[:, None], np.arange(n)[None, :])
+    np.testing.assert_array_equal(got, ref)
+    # scalar form + the subtree preorder interval
+    lo, hi = st.subtree_interval(np.arange(n))
+    for u in range(0, n, 7):
+        assert bool(st.is_ancestor(u, u))
+        inside = (st.root_of == st.root_of[u]) & \
+            (st.preorder >= lo[u]) & (st.preorder <= hi[u])
+        np.testing.assert_array_equal(inside, ref[u])
+    # module-level function is the shared implementation
+    np.testing.assert_array_equal(
+        treealg.is_ancestor(st.preorder, st.postorder, st.root_of,
+                            np.arange(n)[:, None], np.arange(n)[None, :]),
+        ref)
+
+
 def test_chase_wire_words_dtype_invariant():
     """The modeled-volume constant is weight-dtype independent: every
     supported dtype packs to one 32-bit wire word (api.chase_leaves)."""
