@@ -83,7 +83,10 @@ def main():
         "wall_s_max": float(np.max(times)),
         "delta_locality": delta,
         "n": n,
-        "stats": {k: int(v) for k, v in stats.items()},
+        # stats carry int counters plus the string-valued
+        # escalation path (scales_log) — pass non-numerics through
+        "stats": {k: (v if isinstance(v, str) else int(v))
+                  for k, v in stats.items()},
     }
     print("RESULT " + json.dumps(out))
 

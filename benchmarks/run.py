@@ -7,6 +7,8 @@
                    batched multi-instance front door
   graphalg_bench   connectivity + spanning-forest statistics per edge
                    family (the hooking pipeline's second comm pattern)
+  simshard_bench   virtual-PE scaling sweep: the full solver at
+                   p = 8..1024 in ONE process (transport.sim_mesh)
   roofline         the (arch x shape) roofline table from the dry-run
                    artifacts (see repro.launch.dryrun)
 
@@ -170,6 +172,13 @@ def graphalg_bench() -> list[dict]:
     return _subprocess_bench("graphalg", "graphalg_bench.py")
 
 
+def simshard_bench() -> list[dict]:
+    """Virtual-PE scaling sweep (needs no device flags — the simshard
+    backend is in-process by construction; the subprocess only isolates
+    its memory)."""
+    return _subprocess_bench("simshard", "simshard_bench.py")
+
+
 def roofline() -> list[dict]:
     """Aggregate the dry-run JSON artifacts into the roofline table."""
     rows = []
@@ -201,6 +210,7 @@ def main() -> None:
     out["fig4_indirection"] = fig4_indirection()
     out["treealg"] = treealg_bench()
     out["graphalg"] = graphalg_bench()
+    out["simshard"] = simshard_bench()
     out["roofline"] = roofline()
     (RESULTS / "benchmarks.json").write_text(json.dumps(out, indent=1))
     print(f"# wrote {RESULTS / 'benchmarks.json'}")

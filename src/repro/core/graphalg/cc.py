@@ -152,7 +152,7 @@ def _shortcut(plan: MeshPlan, caps: GraphCaps, f, base, m, owner_of):
             plan, f, jnp.ones(m, jnp.bool_), owner_of,
             _lookup_labels(f, base, m), caps.jump, caps.jump, dedup=True)
         nf = jnp.where(answered, resp["lab"], f)
-        changed = lax.psum(jnp.sum(nf != f).astype(jnp.int32), plan.pe_axes)
+        changed = plan.psum(jnp.sum(nf != f).astype(jnp.int32))
         return nf, changed, it + 1, und + gst["undelivered"], \
             msgs + gst["msgs"]
 
@@ -227,7 +227,7 @@ def cc_rounds(plan: MeshPlan, caps: GraphCaps, ea, eb, m: int, m_e: int,
         weid = jnp.full(m + 1, INT_MAX, jnp.int32).at[
             jnp.where(win, slot, m)].min(dlv["e"], mode="drop")[:m]
         f = jnp.where(hooked, minval, f)
-        n_hooked = lax.psum(jnp.sum(hooked).astype(jnp.int32), plan.pe_axes)
+        n_hooked = plan.psum(jnp.sum(hooked).astype(jnp.int32))
 
         # 4. confirm winning edges to their owning PEs
         ccaps = [caps.confirm] * plan.indirection.depth
@@ -244,9 +244,9 @@ def cc_rounds(plan: MeshPlan, caps: GraphCaps, ea, eb, m: int, m_e: int,
         f, jund, jmsgs = _shortcut(plan, caps, f, base, m, owner_node)
         st = dict(st)
         st["cc_rounds"] = st["cc_rounds"] + 1
-        st["cc_msgs"] = st["cc_msgs"] + lax.psum(msgs + jmsgs, plan.pe_axes)
+        st["cc_msgs"] = st["cc_msgs"] + plan.psum(msgs + jmsgs)
         st["cc_undelivered"] = st["cc_undelivered"] + gund + jund + \
-            lax.psum(und, plan.pe_axes)
+            plan.psum(und)
         return f, fmask, n_hooked, it + 1, st
 
     init = (f0, fmask0, jnp.int32(1), jnp.int32(0), stats)
@@ -255,6 +255,5 @@ def cc_rounds(plan: MeshPlan, caps: GraphCaps, ea, eb, m: int, m_e: int,
     # hooks still firing — unconverged, retry with a doubled budget
     stats = dict(stats)
     stats["cc_unconverged"] = stats["cc_unconverged"] + changed
-    stats["forest_edges"] = lax.psum(
-        jnp.sum(fmask).astype(jnp.int32), plan.pe_axes)
+    stats["forest_edges"] = plan.psum(jnp.sum(fmask).astype(jnp.int32))
     return f, fmask, stats

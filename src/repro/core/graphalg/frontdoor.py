@@ -38,15 +38,14 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro import compat
 from repro.core.listrank import api as api_lib
 from repro.core.listrank import tuner
 from repro.core.listrank.config import ListRankConfig
 from repro.core.listrank.exchange import MeshPlan
 from repro.core.listrank import exchange as exchange_lib
+from repro.core.listrank import transport as transport_lib
 from repro.core.listrank.srs import _merge, gather_until_done, zero_stats
 from repro.core.graphalg import cc as cc_lib
 from repro.core.graphalg import forest as forest_lib
@@ -138,10 +137,9 @@ def _pipeline_sharded(edges, seed, *, plan: MeshPlan, cfg: ListRankConfig,
     # ---- 2. unrooted Euler tour of the forest
     succ_t, w1, first_mask, tst = forest_lib.build_forest_tour(
         plan, caps, ea, eb, fmask, f, m, m_e)
-    stats["tour_msgs"] = stats["tour_msgs"] + lax.psum(
-        tst["sent"], plan.pe_axes)
-    stats["tour_undelivered"] = stats["tour_undelivered"] + lax.psum(
-        tst["leftover"], plan.pe_axes)
+    stats["tour_msgs"] = stats["tour_msgs"] + plan.psum(tst["sent"])
+    stats["tour_undelivered"] = stats["tour_undelivered"] + plan.psum(
+        tst["leftover"])
 
     # ---- 3. unit-weight ranking -> positions -> orientation
     _, rank1, sst1 = api_lib._solve_sharded(
@@ -160,8 +158,8 @@ def _pipeline_sharded(edges, seed, *, plan: MeshPlan, cfg: ListRankConfig,
         parent = gid.at[cslot].set(dlv["q"], mode="drop")
         have = jnp.zeros(m, jnp.bool_).at[cslot].set(True, mode="drop")
         miss = jnp.sum(~have & (f != gid)).astype(jnp.int32)
-        stats["stats_undelivered"] = stats["stats_undelivered"] + lax.psum(
-            pst["leftover"] + miss, plan.pe_axes)
+        stats["stats_undelivered"] = stats["stats_undelivered"] + plan.psum(
+            pst["leftover"] + miss)
         return {"components": f, "parent": parent}, stats
 
     # ---- 4. ±1 depth weights over the same tour
@@ -211,8 +209,8 @@ def _pipeline_sharded(edges, seed, *, plan: MeshPlan, cfg: ListRankConfig,
         caps.scalar, caps.scalar, dedup=True)
     L_of = jnp.where(lans, lresp["L"], 0)
     stats["stats_undelivered"] = stats["stats_undelivered"] + \
-        lgst["undelivered"] + lax.psum(
-            lst["leftover"] + sst["leftover"] + miss, plan.pe_axes)
+        lgst["undelivered"] + plan.psum(
+            lst["leftover"] + sst["leftover"] + miss)
 
     # ---- closed-form per-node statistics (DESIGN.md §9)
     is_nonroot = have
@@ -233,11 +231,9 @@ def _jitted_pipeline(mesh, plan, cfg, caps, specs, m, m_e, mode):
     fn = functools.partial(_pipeline_sharded, plan=plan, cfg=cfg, caps=caps,
                            specs=specs, m=m, m_e=m_e, mode=mode)
     spec = P(plan.pe_axes)
-    mapped = compat.shard_map(
-        fn, mesh=mesh, in_specs=(spec, P()),
-        out_specs=(dict.fromkeys(_OUT_KEYS[mode], spec), P()),
-        check_vma=False)
-    return jax.jit(mapped)
+    return transport_lib.device_run(
+        mesh, plan.pe_axes, fn, in_specs=(spec, P()),
+        out_specs=(dict.fromkeys(_OUT_KEYS[mode], spec), P()))
 
 
 _OUT_KEYS = {
@@ -269,6 +265,9 @@ def _prepare(edges, n_nodes, mesh, pe_axes, cfg):
     cfg = cfg or ListRankConfig()
     pe_axes = tuple(pe_axes) if pe_axes is not None \
         else tuple(mesh.axis_names)
+    backend, mesh = transport_lib.resolve_backend(cfg.backend, mesh, pe_axes)
+    if backend == "simshard":
+        transport_lib.check_sim_config(cfg)
     edges = _check_edges(edges, n_nodes)
     plan = MeshPlan.from_mesh(mesh, pe_axes, None,
                               wire_packing=cfg.wire_packing,
@@ -292,7 +291,7 @@ def _prepare(edges, n_nodes, mesh, pe_axes, cfg):
     if cfg.algorithm == "auto":
         cfg = cfg.with_(algorithm=tuner.choose_algorithm(
             cfg, p, plan.indirection.depth, 2 * m_e))
-    return cfg, plan, edges_pad, base_caps, n_pad, m, e_pad, m_e
+    return cfg, mesh, plan, edges_pad, base_caps, n_pad, m, e_pad, m_e
 
 
 def _attempt_specs(cfg, plan, m_e: int, e_pad: int,
@@ -324,7 +323,7 @@ def pipeline_collective_footprint(edges, n_nodes: int, mesh,
     which is exactly the coalescing invariant the tests pin. Traces
     the very program the driver runs on attempt 1 (same jit cache)."""
     from repro.core.listrank import introspect
-    cfg, plan, edges_pad, caps, n_pad, m, e_pad, m_e = _prepare(
+    cfg, mesh, plan, edges_pad, caps, n_pad, m, e_pad, m_e = _prepare(
         edges, n_nodes, mesh, pe_axes, cfg)
     specs = _attempt_specs(cfg, plan, m_e, e_pad)
     runner = _jitted_pipeline(mesh, plan, cfg, caps, specs, m, m_e, mode)
@@ -334,10 +333,10 @@ def pipeline_collective_footprint(edges, n_nodes: int, mesh,
 
 def _run_pipeline(edges, n_nodes, mesh, pe_axes, cfg, mode, seed,
                   max_retries):
-    cfg, plan, edges_pad, base_caps, n_pad, m, e_pad, m_e = _prepare(
+    cfg, mesh, plan, edges_pad, base_caps, n_pad, m, e_pad, m_e = _prepare(
         edges, n_nodes, mesh, pe_axes, cfg)
-    sharding = NamedSharding(mesh, P(plan.pe_axes))
-    edges_d = jax.device_put(jnp.asarray(edges_pad, jnp.int32), sharding)
+    edges_d = transport_lib.put_sharded(mesh, plan.pe_axes,
+                                        jnp.asarray(edges_pad, jnp.int32))
 
     scales = tuner.CapacityScales()
     last_stats = None

@@ -9,6 +9,7 @@ mesh collectives.
 from repro.core.listrank.config import ListRankConfig, IndirectionSpec
 from repro.core.listrank.api import rank_list, rank_list_with_stats
 from repro.core.listrank.sequential import rank_list_seq
+from repro.core.listrank.transport import SimMesh, sim_mesh
 from repro.core.listrank import instances, analysis, tuner
 
 #: batched multi-instance front door (lives in repro.core.treealg.batch,
@@ -22,6 +23,8 @@ __all__ = [
     "rank_list",
     "rank_list_with_stats",
     "rank_list_seq",
+    "SimMesh",
+    "sim_mesh",
     "instances",
     "analysis",
     "tuner",

@@ -27,12 +27,11 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro import compat
 from repro.core.listrank import local as local_lib
 from repro.core.listrank import store as store_lib
+from repro.core.listrank import transport as transport_lib
 from repro.core.listrank import tuner
 from repro.core.listrank.config import IndirectionSpec, ListRankConfig
 from repro.core.listrank.doubling import doubling_solve
@@ -204,7 +203,7 @@ def _restore_local(plan, spec, owner_of, st, aux, rep, succ_orig, rank_orig,
     upd = answered & resp["found"] & rep
     final_succ = jnp.where(upd, resp["succ"], st.succ)
     final_rank = jnp.where(upd, st.rank + resp["rank"], st.rank)
-    miss1 = lax.psum(jnp.sum(rep & ~upd).astype(jnp.int32), plan.pe_axes)
+    miss1 = plan.psum(jnp.sum(rep & ~upd).astype(jnp.int32))
 
     # ---- R2: interior elements
     S, D, stop_is_term = aux["S"], aux["D"], aux["stop_is_term"]
@@ -235,7 +234,7 @@ def _restore_local(plan, spec, owner_of, st, aux, rep, succ_orig, rank_orig,
     upd2 = answered2 & resp2["found"] & need
     final_succ = jnp.where(upd2, resp2["succ"], final_succ)
     final_rank = jnp.where(upd2, D + rank_orig[S] + resp2["rank"], final_rank)
-    miss2 = lax.psum(jnp.sum(need & ~upd2).astype(jnp.int32), plan.pe_axes)
+    miss2 = plan.psum(jnp.sum(need & ~upd2).astype(jnp.int32))
 
     stats = _merge(stats, {
         "fixup_msgs": g1["msgs"] + g2["msgs"],
@@ -297,7 +296,7 @@ def _solve_sharded(succ, rank, seed, *, plan: MeshPlan, cfg: ListRankConfig,
         succ_f, rank_f = st.succ, st.rank
 
     # make stats replicated for a P() out-spec
-    stats = {k: lax.psum(v, plan.pe_axes) for k, v in stats.items()}
+    stats = {k: plan.psum(v) for k, v in stats.items()}
     return succ_f, rank_f, stats
 
 
@@ -310,12 +309,10 @@ def _jitted_solver(mesh, plan, cfg, specs, m):
     fn = functools.partial(_solve_sharded, plan=plan, cfg=cfg, specs=specs,
                            m=m)
     spec_sharded = P(plan.pe_axes)
-    mapped = compat.shard_map(
-        fn, mesh=mesh,
+    return transport_lib.device_run(
+        mesh, plan.pe_axes, fn,
         in_specs=(spec_sharded, spec_sharded, P()),
-        out_specs=(spec_sharded, spec_sharded, P()),
-        check_vma=False)
-    return jax.jit(mapped)
+        out_specs=(spec_sharded, spec_sharded, P()))
 
 
 def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
@@ -330,6 +327,9 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
     """
     cfg = cfg or ListRankConfig()
     pe_axes = tuple(pe_axes) if pe_axes is not None else tuple(mesh.axis_names)
+    backend, mesh = transport_lib.resolve_backend(cfg.backend, mesh, pe_axes)
+    if backend == "simshard":
+        transport_lib.check_sim_config(cfg)
     n = succ.shape[0]
     if indirection is None and cfg.auto_indirection:
         axis_sizes = tuple(mesh.shape[a] for a in pe_axes)
@@ -351,17 +351,19 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
         counts = np.bincount(owners[s == np.arange(n)], minlength=p)
         term_bound = int(counts.max()) if counts.size else 0
 
-    sharding = NamedSharding(mesh, P(pe_axes))
-    succ_d = jax.device_put(jnp.asarray(succ, jnp.int32), sharding)
+    succ_d = transport_lib.put_sharded(mesh, pe_axes,
+                                       jnp.asarray(succ, jnp.int32))
     # explicit weight-dtype canonicalization (chase_leaves): int weights
     # stay integer end-to-end — ±1 tour weights round-trip exactly.
     wdt = canonical_weight_dtype(
         rank.dtype if hasattr(rank, "dtype") else np.asarray(rank).dtype)
-    rank_d = jax.device_put(jnp.asarray(rank, wdt), sharding)
+    rank_d = transport_lib.put_sharded(mesh, pe_axes, jnp.asarray(rank, wdt))
 
     scales = tuner.CapacityScales()
     last_stats = None
+    scales_log = []
     for attempt in range(max_retries + 1):
+        scales_log.append(tuner.format_scales(scales))
         specs = build_specs(cfg, plan, m, n, term_bound, scales)
         solver = _jitted_solver(mesh, plan, cfg, specs, m)
         succ_f, rank_f, stats = solver(succ_d, rank_d, jnp.int32(seed))
@@ -369,6 +371,9 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
         host_stats["attempts"] = attempt + 1
         fatal = sum(host_stats[k] for k in FATAL_KEYS)
         if fatal == 0:
+            # per-attempt capacity escalations, for the golden bit-
+            # identity pins (mesh and simshard must retry identically)
+            host_stats["scales_log"] = ";".join(scales_log)
             return succ_f, rank_f, host_stats
         last_stats = host_stats
         # targeted retry: rescale only the capacity family whose fatal

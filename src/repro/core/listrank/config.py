@@ -101,6 +101,15 @@ class ListRankConfig:
     #: sub-problem capacity slack over the r*ln(n/r) expectation.
     sub_capacity_slack: float = 2.0
 
+    #: transport backend (repro.core.listrank.transport): ``"auto"``
+    #: follows the mesh object passed to the front door (a
+    #: ``transport.SimMesh`` selects the virtual-PE simshard emulation,
+    #: a real mesh the shard_map path); ``"simshard"`` forces virtual
+    #: PEs even for a real mesh (same axis names/sizes, devices
+    #: ignored — any p runs in-process on one device, bit-identical);
+    #: ``"mesh"`` rejects a SimMesh.
+    backend: Literal["auto", "mesh", "simshard"] = "auto"
+
     #: use the Pallas local_chase kernel for local contraction.
     use_pallas: bool = False
 

@@ -44,8 +44,7 @@ def doubling_solve(plan: MeshPlan, st: store_lib.Store,
         # finished once the successor is a fixed point (terminal)
         now_done = done | (upd & (resp["succ"] == st.succ))
         st2 = st.replace(succ=new_succ, rank=new_rank)
-        pending = lax.psum(jnp.sum((~now_done) & st.valid).astype(jnp.int32),
-                           plan.pe_axes)
+        pending = plan.psum(jnp.sum((~now_done) & st.valid).astype(jnp.int32))
         stats = {
             "pd_rounds": stats["pd_rounds"] + 1,
             "pd_msgs": stats["pd_msgs"] + gst["req_sent"] + gst["resp_sent"],
@@ -69,10 +68,10 @@ def allgather_solve(plan: MeshPlan, st: store_lib.Store, max_len_bound: int = 0)
     the subproblem is tiny and PD's log(n') latency-bound rounds
     dominate. Cost: one all-gather of the store + O(cap·p·log) local work.
     """
-    ids = lax.all_gather(st.ids, plan.pe_axes, tiled=True)
-    succ = lax.all_gather(st.succ, plan.pe_axes, tiled=True)
-    rank = lax.all_gather(st.rank, plan.pe_axes, tiled=True)
-    valid = lax.all_gather(st.valid, plan.pe_axes, tiled=True)
+    ids = plan.all_gather(st.ids)
+    succ = plan.all_gather(st.succ)
+    rank = plan.all_gather(st.rank)
+    valid = plan.all_gather(st.valid)
     order = jnp.argsort(jnp.where(valid, ids, jnp.iinfo(jnp.int32).max))
     ids_s, succ_s, rank_s, valid_s = ids[order], succ[order], rank[order], valid[order]
     n = ids_s.shape[0]

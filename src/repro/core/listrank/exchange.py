@@ -44,6 +44,7 @@ import numpy as np
 from jax import lax
 
 from repro.core.listrank.config import IndirectionSpec
+from repro.core.listrank import transport as transport_lib
 
 Pytree = Any
 
@@ -58,11 +59,19 @@ class MeshPlan:
     """Static routing metadata for a PE grid embedded in a mesh.
 
     PE ids are flattened row-major over ``pe_axes`` (matching
-    ``lax.axis_index(pe_axes)``).
+    ``axis_index`` over the full axis tuple).
 
     ``wire_packing`` selects the packed wire format (one collective per
     hop); ``pallas_pack`` additionally routes the pack+bucket-scatter
     through the ``repro.kernels.mailbox_pack`` Pallas kernel.
+
+    ``transport`` is how the program reaches the interconnect: raw mesh
+    collectives under ``shard_map``, or the simshard virtual-PE
+    emulation under ``vmap`` (see :mod:`repro.core.listrank.transport`).
+    Every collective in this package goes through the :meth:`my_id` /
+    :meth:`all_to_all` / :meth:`psum` / :meth:`all_gather` delegates —
+    nothing may call ``lax`` collectives directly (enforced by
+    ``tests/test_transport_audit.py``).
     """
 
     pe_axes: tuple[str, ...]
@@ -70,6 +79,7 @@ class MeshPlan:
     indirection: IndirectionSpec
     wire_packing: bool = True
     pallas_pack: bool = False
+    transport: transport_lib.Transport = transport_lib.MeshTransport()
 
     @property
     def p(self) -> int:
@@ -88,7 +98,21 @@ class MeshPlan:
         return out
 
     def my_id(self) -> jax.Array:
-        return lax.axis_index(self.pe_axes)
+        return self.transport.axis_index(self.pe_axes)
+
+    def all_to_all(self, x: jax.Array, hop: tuple[str, ...],
+                   split_axis: int, concat_axis: int) -> jax.Array:
+        """One routing collective over the axis group ``hop``."""
+        return self.transport.all_to_all(x, hop, split_axis, concat_axis,
+                                         tiled=True)
+
+    def psum(self, x):
+        """Sum-reduce over every PE axis (stats and convergence tests)."""
+        return self.transport.psum(x, self.pe_axes)
+
+    def all_gather(self, x: jax.Array) -> jax.Array:
+        """Tiled gather over every PE axis (allgather base case)."""
+        return self.transport.all_gather(x, self.pe_axes, tiled=True)
 
     def hop_coord(self, pe_id: jax.Array, hop: tuple[str, ...]) -> jax.Array:
         """Coordinate of ``pe_id`` along the (possibly non-contiguous)
@@ -126,7 +150,11 @@ class MeshPlan:
     def from_mesh(mesh, pe_axes: Sequence[str],
                   indirection: IndirectionSpec | None = None,
                   wire_packing: bool = True,
-                  pallas_pack: bool = False) -> "MeshPlan":
+                  pallas_pack: bool = False,
+                  transport: transport_lib.Transport | None = None,
+                  ) -> "MeshPlan":
+        """Plan for a real mesh OR a :class:`transport.SimMesh` — the
+        transport defaults to whichever backend the mesh object implies."""
         pe_axes = tuple(pe_axes)
         sizes = tuple(mesh.shape[a] for a in pe_axes)
         if indirection is None:
@@ -135,9 +163,13 @@ class MeshPlan:
             for a in hop:
                 if a not in pe_axes:
                     raise ValueError(f"hop axis {a} not in pe_axes {pe_axes}")
+        if transport is None:
+            transport = (transport_lib.SimShardTransport()
+                         if transport_lib.is_sim(mesh)
+                         else transport_lib.MeshTransport())
         return MeshPlan(pe_axes=pe_axes, axis_sizes=sizes,
                         indirection=indirection, wire_packing=wire_packing,
-                        pallas_pack=pallas_pack)
+                        pallas_pack=pallas_pack, transport=transport)
 
 
 # --------------------------------------------------------------------------
@@ -378,16 +410,16 @@ def _route_impl(plan: MeshPlan, caps: Sequence[int],
         if plan.wire_packing:
             wf = WireFormat.from_payload(cur)
             buf = _pack_scatter(plan, wf, cur, cur_valid, io_flat, s, cap)
-            recv = lax.all_to_all(buf, hop, 1, 1, tiled=True)  # 1 collective
+            recv = plan.all_to_all(buf, hop, 1, 1)  # 1 collective
             cur, cur_valid = wf.unpack_cols(recv.reshape(wf.width, s * cap))
         else:
             recv = {}
             for k, v in cur.items():
                 b = _scatter_leaf(v, io_flat, s * cap
                                   ).reshape((s, cap) + v.shape[1:])
-                recv[k] = lax.all_to_all(b, hop, 0, 0, tiled=True)
+                recv[k] = plan.all_to_all(b, hop, 0, 0)
             bval = _scatter_leaf(cur_valid, io_flat, s * cap).reshape(s, cap)
-            rval = lax.all_to_all(bval, hop, 0, 0, tiled=True)
+            rval = plan.all_to_all(bval, hop, 0, 0)
             cur = {k: v.reshape((s * cap,) + v.shape[2:])
                    for k, v in recv.items()}
             cur_valid = rval.reshape(s * cap)

@@ -17,6 +17,23 @@ import jax
 COLLECTIVE_PRIMS = ("all_to_all", "all_gather", "psum", "ppermute",
                     "reduce_scatter", "all_reduce")
 
+# Under the simshard backend the vmap batching rules erase the
+# collective eqns (an all_to_all becomes a transpose), so the transport
+# wraps each collective in a pjit named ``simshard_<prim>``. Counting
+# the marker as ``<prim>`` keeps every collective-count pin meaningful
+# on both backends — the same program traces to the same counts.
+from repro.core.listrank.transport import SIM_MARKER_PREFIX
+
+
+def _sim_marker(eqn) -> str | None:
+    """The collective a simshard marker eqn stands for, else None."""
+    name = eqn.params.get("name")
+    if isinstance(name, str) and name.startswith(SIM_MARKER_PREFIX):
+        prim = name[len(SIM_MARKER_PREFIX):]
+        if prim in COLLECTIVE_PRIMS:
+            return prim
+    return None
+
 
 def _sub_jaxprs(value: Any):
     """Yield jaxprs nested inside an eqn param (pjit, while, cond, ...)."""
@@ -35,6 +52,12 @@ def count_primitives(jaxpr) -> dict[str, int]:
 
     def visit(jx):
         for eqn in jx.eqns:
+            marker = _sim_marker(eqn)
+            if marker is not None:
+                # one marker == one simulated collective; its body holds
+                # only the vmap-lowered data movement — don't recurse.
+                counts[marker] = counts.get(marker, 0) + 1
+                continue
             name = eqn.primitive.name
             counts[name] = counts.get(name, 0) + 1
             for v in eqn.params.values():
@@ -79,10 +102,16 @@ def payload_bytes(jaxpr) -> dict[str, int]:
 
     def visit(jx):
         for eqn in jx.eqns:
-            name = eqn.primitive.name
+            name = _sim_marker(eqn) or eqn.primitive.name
             if name in COLLECTIVE_PRIMS:
+                # NB simshard marker operands carry the virtual-PE batch
+                # axis, so marker bytes are p x the per-PE mesh bytes —
+                # byte pins are a mesh-backend property; count parity is
+                # the cross-backend invariant.
                 out[name] = out.get(name, 0) + sum(
                     _aval_bytes(v) for v in eqn.invars)
+                if _sim_marker(eqn) is not None:
+                    continue
             for v in eqn.params.values():
                 for sub in _sub_jaxprs(v):
                     visit(sub)

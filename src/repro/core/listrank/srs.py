@@ -97,7 +97,7 @@ def gather_until_done(plan: MeshPlan, targets, valid, owner_of, lookup_fn,
                                            lookup_fn, req_cap, resp_cap, dedup)
         results = {k: jnp.where(answered, resp[k], v) for k, v in results.items()}
         remaining = remaining & ~answered
-        rn = lax.psum(jnp.sum(remaining).astype(jnp.int32), plan.pe_axes)
+        rn = plan.psum(jnp.sum(remaining).astype(jnp.int32))
         return results, remaining, rn, it + 1, msgs + st["req_sent"] + st["resp_sent"]
 
     init = (results, valid, jnp.int32(1), jnp.int32(0), jnp.int32(0))
@@ -120,10 +120,10 @@ def route_until_done(plan: MeshPlan, caps, payload, dest, valid,
         delivered, dval, (npl, nd, nv), dropped, st = route_compact(
             plan, caps, [(payload, dest, valid)], q)
         carry = deliver_fn(carry, delivered, dval)
-        pending = lax.psum(jnp.sum(nv).astype(jnp.int32) + dropped, plan.pe_axes)
+        pending = plan.psum(jnp.sum(nv).astype(jnp.int32) + dropped)
         return carry, npl, nd, nv, pending, it + 1, msgs + sum(st["sent"])
 
-    pend0 = lax.psum(jnp.sum(valid).astype(jnp.int32), plan.pe_axes)
+    pend0 = plan.psum(jnp.sum(valid).astype(jnp.int32))
     init = (carry, payload, dest, valid, pend0, jnp.int32(0), jnp.int32(0))
     carry, _, _, _, pending, _, msgs = lax.while_loop(cond, body, init)
     return carry, pending, msgs
@@ -249,7 +249,7 @@ def _chase(plan: MeshPlan, spec: LevelSpec, owner_of, st, visited, is_ruler,
             spawn2 = emit_frag(spawn_emit)
             qcount = (jnp.sum(queue2[2]) + jnp.sum(fwd2[2])
                       + jnp.sum(spawn2[2])).astype(jnp.int32)
-            pending = lax.psum(qcount + dropped, plan.pe_axes)
+            pending = plan.psum(qcount + dropped)
             stats = _merge(stats, {
                 "rounds": jnp.int32(1),
                 "chase_msgs": sum(rst["sent"]).astype(jnp.int32),
@@ -276,7 +276,7 @@ def _chase(plan: MeshPlan, spec: LevelSpec, owner_of, st, visited, is_ruler,
     stats = _merge(stats, {
         "dropped": drop0,
         "rulers": n_rulers + jnp.sum(forced).astype(jnp.int32)})
-    pend0 = lax.psum(jnp.sum(qv).astype(jnp.int32), plan.pe_axes)
+    pend0 = plan.psum(jnp.sum(qv).astype(jnp.int32))
     carry = (st, visited, is_ruler, is_sub, consumed,
              fresh_frags((qpl, qd, qv)), stats, pend0, jnp.int32(0))
     carry = rounds(carry)
@@ -286,8 +286,7 @@ def _chase(plan: MeshPlan, spec: LevelSpec, owner_of, st, visited, is_ruler,
     # pool; the drained fragments are folded into the fresh queue.
     def uncovered_of(c):
         st, visited = c[0], c[1]
-        return lax.psum(jnp.sum(st.valid & ~visited).astype(jnp.int32),
-                        plan.pe_axes)
+        return plan.psum(jnp.sum(st.valid & ~visited).astype(jnp.int32))
 
     def r_cond(c):
         return (c[1] > 0) & (c[2] < spec.max_restarts)
@@ -303,7 +302,7 @@ def _chase(plan: MeshPlan, spec: LevelSpec, owner_of, st, visited, is_ruler,
             [queue, fwd, spawn, emit_frag(emit)], qc)
         stats = _merge(stats, {"dropped": drop1, "rulers": n1,
                                "restarts": jnp.int32(1)})
-        pend = lax.psum(jnp.sum(qv).astype(jnp.int32), plan.pe_axes)
+        pend = plan.psum(jnp.sum(qv).astype(jnp.int32))
         carry = rounds((st, visited, is_ruler, is_sub, perm_pos,
                         fresh_frags((qpl, qd, qv)), stats, pend, rd))
         return carry, uncovered_of(carry), restarts + 1
@@ -369,7 +368,7 @@ def flip_direction(plan: MeshPlan, spec: LevelSpec, owner_of, st, is_term0,
     stats = _merge(stats, {
         "fixup_msgs": msgs + gst["msgs"],
         "undelivered": pending + gst["undelivered"] +
-        lax.psum(jnp.sum(st.valid & ~upd).astype(jnp.int32), plan.pe_axes)})
+        plan.psum(jnp.sum(st.valid & ~upd).astype(jnp.int32))})
     return out, stats
 
 
@@ -473,7 +472,7 @@ def solve_store(plan: MeshPlan, cfg: ListRankConfig, specs: list[LevelSpec],
                     rank=jnp.where(upd, st.rank + resp["rank"], st.rank))
     stats = _merge(stats, {
         "undelivered": gst["undelivered"] +
-        lax.psum(jnp.sum(non_sub & ~upd).astype(jnp.int32), plan.pe_axes),
+        plan.psum(jnp.sum(non_sub & ~upd).astype(jnp.int32)),
         "fixup_msgs": gst["msgs"]})
 
     if want_sink:

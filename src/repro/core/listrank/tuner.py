@@ -166,6 +166,13 @@ class CapacityScales:
     graph: float = 1.0
 
 
+def format_scales(scales: CapacityScales) -> str:
+    """Canonical one-line rendering of a scale vector — the golden
+    bit-identity pins compare the per-attempt escalation path as text."""
+    return ",".join(f"{f.name}={getattr(scales, f.name):g}"
+                    for f in dataclasses.fields(scales))
+
+
 #: fatal stat -> the capacity families whose overflow it signals.
 #: ``store_miss`` has no capacity interpretation (it indicates routing
 #: to the wrong owner), so it conservatively rescales everything.

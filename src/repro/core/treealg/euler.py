@@ -39,11 +39,10 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro import compat
 from repro.core.listrank import exchange as exchange_lib
+from repro.core.listrank import transport as transport_lib
 from repro.core.listrank.config import ListRankConfig
 from repro.core.listrank.exchange import INT_MAX, MeshPlan
 
@@ -152,9 +151,8 @@ def _build_sharded(parent, cut, *, plan: MeshPlan, m: int, child_cap: int,
     w = jnp.where(is_term, 0, w)
 
     missing = jnp.sum(nonroot & ~have).astype(jnp.int32)
-    stats = {"tour_undelivered": lax.psum(
-        missing + rr_st["leftover"], plan.pe_axes),
-        "tour_msgs": lax.psum(rr_st["sent"], plan.pe_axes)}
+    stats = {"tour_undelivered": plan.psum(missing + rr_st["leftover"]),
+             "tour_msgs": plan.psum(rr_st["sent"])}
     return succ, w, stats
 
 
@@ -164,9 +162,9 @@ def _jitted_builder(mesh, plan, m, child_cap, reply_cap, weighted, closed):
                            child_cap=child_cap, reply_cap=reply_cap,
                            weighted=weighted, closed=closed)
     spec = P(plan.pe_axes)
-    mapped = compat.shard_map(fn, mesh=mesh, in_specs=(spec, P()),
-                              out_specs=(spec, spec, P()), check_vma=False)
-    return jax.jit(mapped)
+    return transport_lib.device_run(mesh, plan.pe_axes, fn,
+                                    in_specs=(spec, P()),
+                                    out_specs=(spec, spec, P()))
 
 
 def build_tour(parent, mesh, pe_axes=None, cfg: ListRankConfig | None = None,
@@ -191,6 +189,9 @@ def build_tour(parent, mesh, pe_axes=None, cfg: ListRankConfig | None = None,
     """
     cfg = cfg or ListRankConfig()
     pe_axes = tuple(pe_axes) if pe_axes is not None else tuple(mesh.axis_names)
+    backend, mesh = transport_lib.resolve_backend(cfg.backend, mesh, pe_axes)
+    if backend == "simshard":
+        transport_lib.check_sim_config(cfg)
     parent_np = np.asarray(jax.device_get(parent)).astype(np.int64)
     n = parent_np.shape[0]
     if n == 0:
@@ -215,8 +216,8 @@ def build_tour(parent, mesh, pe_axes=None, cfg: ListRankConfig | None = None,
     parent_pad = np.concatenate([parent_np, np.arange(n, n + pad)])
     n_pad = n + pad
     m = n_pad // p
-    sharding = NamedSharding(mesh, P(pe_axes))
-    parent_d = jax.device_put(jnp.asarray(parent_pad, jnp.int32), sharding)
+    parent_d = transport_lib.put_sharded(mesh, pe_axes,
+                                         jnp.asarray(parent_pad, jnp.int32))
     cut_d = jnp.int32(cut_at if closed else -1)
 
     cap1, cap2 = tour_caps(parent_pad, p)

@@ -1,0 +1,75 @@
+"""Shared case list + record schema for the golden bit-identity pins.
+
+The same cases run twice: once on a real 8-device mesh (subprocess,
+``tests/_golden_multi.py`` — that run's records are committed under
+``tests/golden/``) and once on the simshard virtual-PE backend
+in-process (``tests/test_simshard_golden.py``). The pin: solve output
+bytes AND the per-attempt capacity-escalation path are identical.
+"""
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core.listrank import ListRankConfig, instances
+
+#: the golden mesh: 8 PEs on one flat axis (both backends).
+AXES = ("pe",)
+SHAPE = (8,)
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+
+def golden_cases():
+    """(name, succ, rank, cfg) per case — seeds x families at p=8."""
+    base = ListRankConfig(srs_rounds=1, local_contraction=True)
+    cases = []
+    # random permutation lists (paper's List(n, gamma=1)), two seeds
+    for seed in (1, 2):
+        s, r = instances.gen_list(512, gamma=1.0, seed=seed)
+        cases.append((f"list-g1-s{seed}", s, r, base))
+    # GNM-like / RGG2D-like BFS-tree Euler tours
+    for fam, loc in (("gnm", False), ("rgg2d", True)):
+        s, r, _ = instances.gen_euler_tour(257, seed=3, locality=loc)
+        s, r = instances.pad_to_multiple(s, r, 8)
+        cases.append((f"{fam}-tour-s3", s, r, base))
+    # ±1-weighted forest tour through two recursion levels
+    s, r, _ = instances.gen_euler_tour(257, seed=4, locality=True,
+                                       weighted=True, num_trees=5)
+    s, r = instances.pad_to_multiple(s, r, 8)
+    cases.append(("euler-forest-s4", s, r, base.with_(srs_rounds=2)))
+    # float32 weights exercise the bitcast wire path end to end
+    s, r = instances.gen_random_lists(512, num_lists=11, seed=5,
+                                      weighted=True)
+    cases.append(("random-float-s5", s, r.astype(np.float32), base))
+    # deliberately starved sub-store: the targeted retry ladder fires
+    # (3 attempts, sub->global widening) and must escalate IDENTICALLY
+    # on both backends
+    s, r = instances.gen_list(512, gamma=1.0, seed=6)
+    cases.append(("escalate-s6", s, r,
+                  base.with_(sub_capacity_slack=0.05)))
+    return cases
+
+
+def case_record(succ_out, rank_out, stats) -> dict:
+    """The byte-identity record of one solve: output hashes + the
+    per-attempt escalation path (+ full counter dict, also pinned)."""
+    succ_np = np.asarray(succ_out)
+    rank_np = np.asarray(rank_out)
+    counters = {k: v for k, v in sorted(stats.items())
+                if isinstance(v, int)}
+    return {
+        "n": int(succ_np.shape[0]),
+        "succ_sha256": hashlib.sha256(
+            succ_np.astype(np.int32).tobytes()).hexdigest(),
+        "rank_dtype": str(rank_np.dtype),
+        "rank_sha256": hashlib.sha256(rank_np.tobytes()).hexdigest(),
+        "attempts": int(stats["attempts"]),
+        "scales_log": stats["scales_log"],
+        "counters": counters,
+    }
+
+
+def load_golden(name: str) -> dict:
+    return json.loads((GOLDEN_DIR / f"{name}.json").read_text())

@@ -1,6 +1,6 @@
 """Shared per-node oracle for the treealg tests: explicit DFS with
 ascending-id children (the tour's adjacency order). Used by
-tests/test_treealg.py and the tests/_treealg_multi.py subprocess."""
+tests/test_treealg.py and the tests/_subprocess_smoke.py subprocess."""
 import sys
 
 import numpy as np

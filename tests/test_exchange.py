@@ -1,7 +1,8 @@
 """Exchange-layer unit tests: packed wire format, sort-free compaction,
 fused route_compact, dedup gather, and the one-collective-per-hop
 guarantee (jaxpr inspection). Single-device (p=1 self-sends) — the
-multi-PE equivalence matrix runs in test_exchange_multi."""
+multi-PE device smoke runs in the consolidated subprocess driver
+(tests/_subprocess_smoke.py, suite "exchange")."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -396,15 +397,5 @@ def test_mailbox_pack_pallas_matches_ref():
     np.testing.assert_array_equal(np.asarray(b), want)
 
 
-# ------------------------------------------------------ multi-PE matrix
-@pytest.mark.slow
-def test_exchange_multi_device():
-    import pathlib
-    import subprocess
-    import sys
-    script = pathlib.Path(__file__).parent / "_exchange_multi.py"
-    proc = subprocess.run([sys.executable, str(script)],
-                          capture_output=True, text=True, timeout=2400)
-    print(proc.stdout)
-    print(proc.stderr[-2000:] if proc.stderr else "")
-    assert proc.returncode == 0, "exchange multi-device matrix failed"
+# The multi-PE exchange smoke moved to the consolidated subprocess
+# driver: tests/test_listrank_multi.py::test_subprocess_smoke[exchange].

@@ -1,0 +1,143 @@
+"""Property-based coverage of the exchange layer's pure kernels.
+
+Hypothesis round-trips for the :class:`WireFormat` pack/unpack pair
+across leaf widths, dtypes and capacities, and ``compact_queue``
+against a numpy oracle — wired through ``tests/_hypothesis_compat`` so
+minimal environments (no hypothesis) still collect and skip cleanly.
+Each property also has one example-based pin so the oracle logic runs
+everywhere.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HealthCheck, given, settings, st
+from repro.core.listrank.exchange import WireFormat, compact_queue
+
+WIRE_DTYPES = ("int32", "float32", "uint32", "bool", "int8", "int16",
+               "uint8")
+
+
+def _gen_leaf(rng: np.random.Generator, q: int, dtype: str, trail):
+    shape = (q,) + tuple(trail)
+    if dtype == "bool":
+        return rng.integers(0, 2, shape).astype(np.bool_)
+    if dtype == "float32":
+        # arbitrary bit patterns (incl. NaNs/infs) must survive exactly
+        return rng.integers(-2**31, 2**31, shape, dtype=np.int64).astype(
+            np.int32).view(np.float32)
+    info = np.iinfo(dtype)
+    return rng.integers(info.min, int(info.max) + 1, shape,
+                        dtype=np.int64).astype(dtype)
+
+
+def _roundtrip(q: int, leaf_specs, seed: int):
+    rng = np.random.default_rng(seed)
+    payload = {f"k{i}": jnp.asarray(_gen_leaf(rng, q, dt, trail))
+               for i, (dt, trail) in enumerate(leaf_specs)}
+    valid = jnp.asarray(rng.integers(0, 2, q).astype(np.bool_))
+    wf = WireFormat.from_payload(payload)
+    assert wf.width == 1 + sum(int(np.prod(trail, dtype=np.int64)) or 1
+                               for _, trail in leaf_specs)
+    wire = wf.pack(payload, valid)
+    assert wire.shape == (q, wf.width) and wire.dtype == jnp.int32
+    # both unpack paths must round-trip: row-major unpack AND the
+    # column-major unpack_cols the packed route hot path actually uses
+    for path, (unpacked, got_valid) in (("unpack", wf.unpack(wire)),
+                                        ("unpack_cols",
+                                         wf.unpack_cols(wire.T))):
+        np.testing.assert_array_equal(np.asarray(got_valid),
+                                      np.asarray(valid), err_msg=path)
+        for k, v in payload.items():
+            got = np.asarray(unpacked[k])
+            assert got.dtype == np.asarray(v).dtype, (path, k)
+            # compare raw bits: float NaN payloads must round-trip
+            np.testing.assert_array_equal(
+                _bits(got), _bits(np.asarray(v)), err_msg=f"{path}/{k}")
+
+
+def _bits(a: np.ndarray) -> np.ndarray:
+    if a.dtype == np.bool_:
+        return a.astype(np.int32)
+    return a.view({4: np.int32, 2: np.int16, 1: np.int8}[a.itemsize])
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(q=st.integers(min_value=1, max_value=33),
+       leaves=st.lists(
+           st.tuples(st.sampled_from(WIRE_DTYPES),
+                     st.sampled_from([(), (1,), (2,), (3,), (2, 2)])),
+           min_size=1, max_size=4),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_wireformat_roundtrip_property(q, leaves, seed):
+    _roundtrip(q, leaves, seed)
+
+
+def test_wireformat_roundtrip_examples():
+    """Example pin of the same property (runs without hypothesis)."""
+    _roundtrip(1, [("int32", ())], seed=0)
+    _roundtrip(17, [("float32", (2,)), ("bool", ()), ("int8", (3,))], seed=1)
+    _roundtrip(32, [("uint32", (2, 2)), ("int16", ())], seed=2)
+
+
+def test_wireformat_rejects_unsupported_dtypes():
+    payload = {"x": jnp.zeros(4, jnp.float16)}  # no sub-word float lane
+    with pytest.raises(TypeError):
+        WireFormat.from_payload(payload).pack(payload, jnp.ones(4, bool))
+
+
+def _oracle_compact(frags, cap: int):
+    """Numpy reference: valid rows packed front, in order, truncated."""
+    keys = list(frags[0][0].keys())
+    rows = {k: [] for k in keys}
+    dests = []
+    for pl, d, v in frags:
+        for i in np.flatnonzero(np.asarray(v)):
+            for k in keys:
+                rows[k].append(np.asarray(pl[k])[i])
+            dests.append(np.asarray(d)[i])
+    n_valid = len(dests)
+    out = {k: np.stack(rows[k][:cap]) if min(n_valid, cap) else
+           np.zeros((0,) + np.asarray(frags[0][0][k]).shape[1:],
+                    np.asarray(frags[0][0][k]).dtype)
+           for k in keys}
+    return out, np.asarray(dests[:cap]), min(n_valid, cap), \
+        max(n_valid - cap, 0)
+
+
+def _check_compact(frag_sizes, cap: int, seed: int):
+    rng = np.random.default_rng(seed)
+    frags = []
+    for fq in frag_sizes:
+        pl = {"a": jnp.asarray(rng.integers(-99, 99, fq), jnp.int32),
+              "b": jnp.asarray(rng.normal(size=(fq, 2)).astype(np.float32))}
+        d = jnp.asarray(rng.integers(0, 7, fq), jnp.int32)
+        v = jnp.asarray(rng.integers(0, 2, fq).astype(np.bool_))
+        frags.append((pl, d, v))
+    out_pl, out_d, out_v, dropped = compact_queue(frags, cap)
+    ref_pl, ref_d, n_kept, ref_dropped = _oracle_compact(frags, cap)
+    assert int(dropped) == ref_dropped
+    got_v = np.asarray(out_v)
+    assert int(got_v.sum()) == n_kept
+    assert got_v[:n_kept].all()  # packed to the front
+    np.testing.assert_array_equal(np.asarray(out_d)[:n_kept], ref_d)
+    for k in ref_pl:
+        np.testing.assert_array_equal(np.asarray(out_pl[k])[:n_kept],
+                                      ref_pl[k], err_msg=k)
+
+
+@settings(max_examples=50, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(frag_sizes=st.lists(st.integers(min_value=1, max_value=24),
+                           min_size=1, max_size=4),
+       cap=st.integers(min_value=1, max_value=64),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_compact_queue_matches_numpy_oracle_property(frag_sizes, cap, seed):
+    _check_compact(frag_sizes, cap, seed)
+
+
+def test_compact_queue_matches_numpy_oracle_examples():
+    _check_compact([5], cap=8, seed=3)          # all fit
+    _check_compact([9, 4, 7], cap=6, seed=4)    # overflow drops the tail
+    _check_compact([3, 3], cap=1, seed=5)       # cap smaller than a frag

@@ -1,5 +1,5 @@
 """graphalg subsystem tests (single-device mesh; the 8-PE matrix runs
-in tests/_graphalg_multi.py): connected components and spanning forests
+in tests/_subprocess_smoke.py suite "graphalg"): connected components and spanning forests
 against a host union-find across the instance families, the end-to-end
 graph_stats pipeline against per-node DFS recomputation and against
 treealg on the emitted parent array, the closed-form ancestor/interval

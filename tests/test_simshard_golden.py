@@ -1,0 +1,63 @@
+"""Golden bit-identity pins: simshard == the 8-device mesh, byte for
+byte.
+
+The committed ``tests/golden/*.json`` records were produced by the
+REAL-mesh subprocess run (``tests/_golden_multi.py --write``). The fast
+tests here re-run every case on the simshard virtual-PE backend
+in-process and assert the solve output hashes, attempt count,
+per-attempt capacity-escalation path, and every solver counter are
+identical — the emulation is the mesh program, not an approximation of
+it. The slow test re-runs the mesh subprocess and revalidates the
+committed records themselves.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.listrank import rank_list_with_stats, sim_mesh
+
+import _simshard_cases as cases_lib
+
+_CASES = cases_lib.golden_cases()
+
+
+@pytest.mark.parametrize("case", _CASES, ids=[c[0] for c in _CASES])
+def test_simshard_matches_mesh_golden(case):
+    name, succ, rank, cfg = case
+    golden = cases_lib.load_golden(name)
+    mesh = sim_mesh(cases_lib.SHAPE, cases_lib.AXES)
+    s, r, stats = rank_list_with_stats(succ, rank, mesh, cfg=cfg)
+    rec = cases_lib.case_record(s, r, stats)
+    assert rec == golden, (
+        f"simshard diverged from the mesh golden for {name}: "
+        f"{ {k: (rec[k], golden[k]) for k in rec if rec[k] != golden[k]} }")
+
+
+def test_every_golden_has_a_case():
+    """No stale committed goldens (a renamed case must retire its file)."""
+    names = {c[0] for c in _CASES}
+    on_disk = {p.stem for p in cases_lib.GOLDEN_DIR.glob("*.json")}
+    assert on_disk == names
+
+
+@pytest.mark.slow
+def test_mesh_golden_regen():
+    """The committed goldens ARE the current mesh output (subprocess
+    8-device re-run)."""
+    script = pathlib.Path(__file__).parent / "_golden_multi.py"
+    proc = subprocess.run([sys.executable, str(script)],
+                          capture_output=True, text=True, timeout=2400)
+    print(proc.stderr[-2000:] if proc.returncode else "")
+    assert proc.returncode == 0, "golden generator failed"
+    seen = set()
+    for line in proc.stdout.splitlines():
+        if not line.startswith("GOLDEN "):
+            continue
+        rec = json.loads(line[len("GOLDEN "):])
+        name = rec.pop("name")
+        seen.add(name)
+        assert rec == cases_lib.load_golden(name), f"mesh drifted: {name}"
+    assert seen == {c[0] for c in _CASES}

@@ -1,5 +1,5 @@
 """treealg subsystem tests (single-device mesh; multi-PE in
-tests/_treealg_multi.py): device tour vs the instances.py oracle, tree
+tests/_subprocess_smoke.py suite "treealg"): device tour vs the instances.py oracle, tree
 statistics vs per-node DFS recomputation on every instance family, the
 re-rooting orientation, and the batched front door's two contracts —
 one solver invocation per batch, and a per-round collective count
