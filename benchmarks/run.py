@@ -179,6 +179,14 @@ def simshard_bench() -> list[dict]:
     return _subprocess_bench("simshard", "simshard_bench.py")
 
 
+def recovery_bench() -> list[dict]:
+    """Resume-from-level-k vs full restart + the sampled-splitter
+    estimation pre-pass (writes recovery.json in both modes — the
+    artifact records its own quick flag)."""
+    return _subprocess_bench("recovery", "recovery_bench.py",
+                             quick_artifact=False)
+
+
 def roofline() -> list[dict]:
     """Aggregate the dry-run JSON artifacts into the roofline table."""
     rows = []
@@ -211,6 +219,7 @@ def main() -> None:
     out["treealg"] = treealg_bench()
     out["graphalg"] = graphalg_bench()
     out["simshard"] = simshard_bench()
+    out["recovery"] = recovery_bench()
     out["roofline"] = roofline()
     (RESULTS / "benchmarks.json").write_text(json.dumps(out, indent=1))
     print(f"# wrote {RESULTS / 'benchmarks.json'}")

@@ -1,3 +1,3 @@
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import Checkpointer, CheckpointWriteError
 
-__all__ = ["Checkpointer"]
+__all__ = ["Checkpointer", "CheckpointWriteError"]

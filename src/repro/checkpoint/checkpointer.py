@@ -30,6 +30,17 @@ def _flatten(tree):
     return keys, [leaf for _, leaf in flat], treedef
 
 
+class CheckpointWriteError(RuntimeError):
+    """A background checkpoint write failed; carries the failing step."""
+
+    def __init__(self, step: int, cause: BaseException):
+        super().__init__(
+            f"background checkpoint write for step {step} failed: "
+            f"{cause!r}")
+        self.step = step
+        self.__cause__ = cause
+
+
 class Checkpointer:
     def __init__(self, directory, keep: int = 3, async_save: bool = True):
         self.dir = pathlib.Path(directory)
@@ -37,48 +48,73 @@ class Checkpointer:
         self.keep = keep
         self._pool = futures.ThreadPoolExecutor(1) if async_save else None
         self._pending: futures.Future | None = None
+        self._pending_step: int | None = None
 
     # ------------------------------------------------------------- save
-    def save(self, step: int, state, blocking: bool = False):
+    def save(self, step: int, state, blocking: bool = False, meta=None):
         """Snapshot ``state`` at ``step``. Device->host copy happens
         synchronously (consistent snapshot); serialization + fsync run
-        on the background thread unless blocking."""
+        on the background thread unless blocking. ``meta`` (a JSON-able
+        dict) is stored in the step's manifest. A failure of the
+        *previous* background write surfaces here (or at :meth:`wait`)
+        as :class:`CheckpointWriteError` naming the failed step."""
         keys, leaves, _ = _flatten(state)
         host = [np.asarray(jax.device_get(x)) for x in leaves]
-        if self._pending is not None:
-            self._pending.result()  # one in flight at a time
-            self._pending = None
+        self.wait()  # one in flight at a time; surfaces prior failures
         if self._pool is not None and not blocking:
-            self._pending = self._pool.submit(self._write, step, keys, host)
+            self._pending_step = step
+            self._pending = self._pool.submit(self._write, step, keys, host,
+                                              meta)
         else:
-            self._write(step, keys, host)
+            self._write(step, keys, host, meta)
 
     def wait(self):
         if self._pending is not None:
-            self._pending.result()
-            self._pending = None
+            pending, step = self._pending, self._pending_step
+            self._pending, self._pending_step = None, None
+            try:
+                pending.result()
+            except Exception as e:
+                raise CheckpointWriteError(step, e) from e
 
-    def _write(self, step, keys, host):
+    def _write(self, step, keys, host, meta=None):
         tmp = self.dir / f".tmp-{step}-{time.time_ns()}"
         tmp.mkdir()
         np.savez(tmp / "state.npz", **{k: v for k, v in zip(keys, host)})
         (tmp / "manifest.json").write_text(json.dumps(
-            {"step": step, "keys": keys, "time": time.time()}))
+            {"step": step, "keys": keys, "time": time.time(),
+             "meta": meta}))
         final = self.dir / f"step_{step:08d}"
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)  # atomic publish
-        self._gc()
+        self._gc(protect=step)
 
-    def _gc(self):
+    def _gc(self, protect: int | None = None):
+        """Keep the newest ``keep`` checkpoints — but never delete the
+        step just written (``protect``): publishing an out-of-order step
+        must not gc the checkpoint the caller believes now exists."""
+        keep_names = {f"step_{protect:08d}"} if protect is not None else set()
         ckpts = sorted(self.dir.glob("step_*"))
         for old in ckpts[:-self.keep]:
-            shutil.rmtree(old, ignore_errors=True)
+            if old.name not in keep_names:
+                shutil.rmtree(old, ignore_errors=True)
 
     # ---------------------------------------------------------- restore
     def latest_step(self) -> int | None:
         ckpts = sorted(self.dir.glob("step_*"))
         return int(ckpts[-1].name.split("_")[1]) if ckpts else None
+
+    def manifest(self, step: int | None = None) -> dict:
+        """The manifest dict of ``step`` (latest when None) — includes
+        the ``meta`` stored at save time. Lets a restorer read the
+        layout parameters before it can build the ``like`` tree."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = self.dir / f"step_{step:08d}" / "manifest.json"
+        return json.loads(path.read_text())
 
     def restore(self, step: int | None, like, shardings=None):
         """Restore into the structure of ``like`` (a pytree of arrays or

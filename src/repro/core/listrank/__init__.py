@@ -8,6 +8,9 @@ mesh collectives.
 """
 from repro.core.listrank.config import ListRankConfig, IndirectionSpec
 from repro.core.listrank.api import rank_list, rank_list_with_stats
+from repro.core.listrank.resume import SolveExhausted
+from repro.core.listrank.faults import (FaultSpec, FaultInjector,
+                                        InjectedFault, CorruptedState)
 from repro.core.listrank.sequential import rank_list_seq
 from repro.core.listrank.transport import SimMesh, sim_mesh
 from repro.core.listrank import instances, analysis, tuner
@@ -23,6 +26,11 @@ __all__ = [
     "rank_list",
     "rank_list_with_stats",
     "rank_list_seq",
+    "SolveExhausted",
+    "FaultSpec",
+    "FaultInjector",
+    "InjectedFault",
+    "CorruptedState",
     "SimMesh",
     "sim_mesh",
     "instances",

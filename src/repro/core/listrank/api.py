@@ -40,8 +40,10 @@ from repro.core.listrank.exchange import MeshPlan
 from repro.core.listrank.srs import (LevelSpec, gather_until_done,
                                      route_until_done, solve_store,
                                      zero_stats, _merge)
-
-FATAL_KEYS = ("dropped", "sub_overflow", "store_miss", "undelivered")
+from repro.core.listrank import resume as resume_lib
+from repro.core.listrank.resume import FATAL_KEYS, SolveExhausted  # noqa: F401
+# (re-exported: graphalg.frontdoor composes FATAL_KEYS; callers catch
+# SolveExhausted from either module.)
 
 
 def chase_leaves(weight_dtype=jnp.float32) -> dict:
@@ -87,43 +89,58 @@ def canonical_weight_dtype(dtype) -> jnp.dtype:
 
 def build_specs(cfg: ListRankConfig, plan: MeshPlan, m: int, n: int,
                 term_bound: int,
-                scales: tuner.CapacityScales = tuner.CapacityScales(),
+                scales=tuner.CapacityScales(),
+                estimate: tuner.CapacityEstimate | None = None,
                 ) -> tuple[LevelSpec, ...]:
     """Host-side derivation of every static capacity (see module doc).
 
     Per-level ruler fractions come from :func:`tuner.level_plan` — the
     cost model when ``cfg.ruler_fraction is None``, the fixed fraction
     otherwise. ``scales`` carries the targeted retry multipliers
-    (chase mail/queue, sub store, gather) from the driver's retry loop.
+    (chase mail/queue, sub store, gather) from the driver's retry loop —
+    either one :class:`tuner.CapacityScales` for every level or a
+    per-level sequence (``srs_rounds`` chase levels + the base level;
+    level-resume escalates only levels >= the faulting one, so completed
+    levels' static shapes never change). ``estimate`` (the sampled-
+    splitter pre-pass, :func:`tuner.estimate_capacities`) replaces the
+    static ``cfg.capacity_slack`` guess with the measured per-hop
+    destination skew for the mailbox families.
     """
     levels = tuner.level_plan(cfg, plan.p, plan.indirection.depth, n)
+    level_scales = tuner.normalize_level_scales(scales, cfg.srs_rounds + 1)
+
+    def hop_slack(hi: int) -> float:
+        return (estimate.slack_for_hop(hi) if estimate is not None
+                else cfg.capacity_slack)
+
     specs: list[LevelSpec] = []
     cap = m
     tb = term_bound
     p = plan.p
     logp = math.log2(max(p, 2))
-    chase_slack = cfg.capacity_slack * scales.chase
-    gather_slack = cfg.capacity_slack * scales.gather
-    for lp in levels:
+    for li, lp in enumerate(levels):
+        sc = level_scales[li]
         frac = lp.frac
         r_static = max(cfg.min_rulers_per_pe, int(math.ceil(frac * cap)))
         mail_caps = tuple(
             max(cfg.min_capacity,
-                int(math.ceil(chase_slack * r_static / plan.hop_size(hop))))
-            for hop in plan.indirection.hops)
+                int(math.ceil(hop_slack(hi) * sc.chase * r_static
+                              / plan.hop_size(hop))))
+            for hi, hop in enumerate(plan.indirection.hops))
         inbox = sum(plan.hop_size(h) * c
                     for h, c in zip(plan.indirection.hops, mail_caps))
-        queue_cap = int(max(cfg.queue_slack * r_static * scales.chase,
+        queue_cap = int(max(cfg.queue_slack * r_static * sc.chase,
                             2 * inbox + cfg.spawn_window + 64))
         # rounds ~ n/r + log p (DESIGN.md §2); 1/frac is the per-PE n/r.
         max_rounds = int(cfg.max_round_slack * (1.0 / frac + logp) + 256)
         exp_sub = r_static * (1.0 + math.log(max(1.0 / frac, 2.0))) + tb + 64
-        cap_sub = min(cap, int(math.ceil(cfg.sub_capacity_slack * scales.sub
+        cap_sub = min(cap, int(math.ceil(cfg.sub_capacity_slack * sc.sub
                                          * exp_sub)))
         gcap = tuple(
             max(cfg.min_capacity,
-                int(math.ceil(gather_slack * cap / plan.hop_size(hop))))
-            for hop in plan.indirection.hops)
+                int(math.ceil(hop_slack(hi) * sc.gather * cap
+                              / plan.hop_size(hop))))
+            for hi, hop in enumerate(plan.indirection.hops))
         specs.append(LevelSpec(
             cap=cap, r_static=r_static, mail_caps=mail_caps,
             queue_cap=queue_cap, spawn_window=cfg.spawn_window,
@@ -133,10 +150,12 @@ def build_specs(cfg: ListRankConfig, plan: MeshPlan, m: int, n: int,
         cap = cap_sub
         tb = cap_sub  # every sub element may be a sub-terminal
     # base level (pointer doubling or all-gather)
+    sc = level_scales[-1]
     gcap = tuple(
         max(cfg.min_capacity,
-            int(math.ceil(gather_slack * cap / plan.hop_size(hop))))
-        for hop in plan.indirection.hops)
+            int(math.ceil(hop_slack(hi) * sc.gather * cap
+                          / plan.hop_size(hop))))
+        for hi, hop in enumerate(plan.indirection.hops))
     specs.append(LevelSpec(
         cap=cap, r_static=0, mail_caps=(0,) * plan.indirection.depth,
         queue_cap=0, spawn_window=0,
@@ -319,11 +338,27 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
                          cfg: ListRankConfig | None = None,
                          indirection: IndirectionSpec | None = None,
                          seed: int = 0, max_retries: int = 3,
-                         term_bound: int | None = None):
+                         term_bound: int | None = None,
+                         supervisor=None, inject=None,
+                         stage_counters: bool = False, initial_scales=None):
     """Rank lists distributed over ``mesh``. Returns (succ, rank, stats).
 
     ``succ``/``rank`` may be numpy or jax arrays of length n (divisible
     by the PE count); they are placed block-sharded over ``pe_axes``.
+
+    The solve runs as the level-resumable stage loop
+    (:mod:`repro.core.listrank.resume`): a fatal capacity overflow at
+    level k resumes from the end of level k-1 with only the implicated
+    family escalated. ``supervisor``
+    (:class:`repro.runtime.fault_tolerance.SolveSupervisor`) adds
+    level-boundary checkpoints, preemption handling, and restore-on-
+    restart; ``inject`` (:class:`repro.core.listrank.faults.FaultSpec`
+    or a sequence) drives deterministic fault injection;
+    ``stage_counters`` records per-stage collective counts;
+    ``initial_scales`` pre-seeds the per-level capacity scales
+    (CapacityScales or a per-level sequence). A run that exhausts its
+    escalation budget raises :class:`SolveExhausted` carrying the full
+    escalation path and the per-family fatal stats.
     """
     cfg = cfg or ListRankConfig()
     pe_axes = tuple(pe_axes) if pe_axes is not None else tuple(mesh.axis_names)
@@ -345,11 +380,20 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
         # Corollary-1 regime check: PD below the efficiency threshold.
         cfg = cfg.with_(algorithm=tuner.choose_algorithm(
             cfg, p, plan.indirection.depth, m))
+    s_host = None
     if term_bound is None:
-        s = np.asarray(jax.device_get(succ))
+        s_host = np.asarray(jax.device_get(succ))
         owners = np.arange(n) // m
-        counts = np.bincount(owners[s == np.arange(n)], minlength=p)
+        counts = np.bincount(owners[s_host == np.arange(n)], minlength=p)
         term_bound = int(counts.max()) if counts.size else 0
+
+    estimate = None
+    if cfg.capacity_estimation:
+        # sampled-splitter pre-pass: size mailboxes for the measured
+        # destination skew instead of the static slack guess.
+        if s_host is None:
+            s_host = np.asarray(jax.device_get(succ))
+        estimate = tuner.estimate_capacities(s_host, plan, m, cfg, seed=seed)
 
     succ_d = transport_lib.put_sharded(mesh, pe_axes,
                                        jnp.asarray(succ, jnp.int32))
@@ -359,29 +403,15 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
         rank.dtype if hasattr(rank, "dtype") else np.asarray(rank).dtype)
     rank_d = transport_lib.put_sharded(mesh, pe_axes, jnp.asarray(rank, wdt))
 
-    scales = tuner.CapacityScales()
-    last_stats = None
-    scales_log = []
-    for attempt in range(max_retries + 1):
-        scales_log.append(tuner.format_scales(scales))
-        specs = build_specs(cfg, plan, m, n, term_bound, scales)
-        solver = _jitted_solver(mesh, plan, cfg, specs, m)
-        succ_f, rank_f, stats = solver(succ_d, rank_d, jnp.int32(seed))
-        host_stats = {k: int(jax.device_get(v)) for k, v in stats.items()}
-        host_stats["attempts"] = attempt + 1
-        fatal = sum(host_stats[k] for k in FATAL_KEYS)
-        if fatal == 0:
-            # per-attempt capacity escalations, for the golden bit-
-            # identity pins (mesh and simshard must retry identically)
-            host_stats["scales_log"] = ";".join(scales_log)
-            return succ_f, rank_f, host_stats
-        last_stats = host_stats
-        # targeted retry: rescale only the capacity family whose fatal
-        # stat fired (tuner.FAMILY_OF), not every capacity.
-        scales = tuner.escalate(scales, host_stats)
-    raise RuntimeError(
-        f"list ranking did not complete after {max_retries + 1} attempts; "
-        f"stats={last_stats}")
+    def build_level_specs(level_scales):
+        return build_specs(cfg, plan, m, n, term_bound, scales=level_scales,
+                           estimate=estimate)
+
+    return resume_lib.run_staged(
+        succ_d, rank_d, mesh=mesh, plan=plan, cfg=cfg, m=m, n=n, seed=seed,
+        build_level_specs=build_level_specs, max_retries=max_retries,
+        supervisor=supervisor, inject=inject, stage_counters=stage_counters,
+        initial_scales=initial_scales)
 
 
 def rank_list(succ, rank, mesh, **kw):

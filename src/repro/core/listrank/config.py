@@ -101,6 +101,15 @@ class ListRankConfig:
     #: sub-problem capacity slack over the r*ln(n/r) expectation.
     sub_capacity_slack: float = 2.0
 
+    #: sampled-splitter capacity estimation (tuner.estimate_capacities):
+    #: derive per-hop mailbox slack from a host-side sample of the
+    #: instance's destination distribution instead of the static
+    #: ``capacity_slack`` guess. Off by default — the static derivation
+    #: is the pinned golden behavior.
+    capacity_estimation: bool = False
+    #: sample size for the capacity pre-pass.
+    estimation_sample: int = 2048
+
     #: transport backend (repro.core.listrank.transport): ``"auto"``
     #: follows the mesh object passed to the front door (a
     #: ``transport.SimMesh`` selects the virtual-PE simshard emulation,

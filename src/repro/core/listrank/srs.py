@@ -395,33 +395,28 @@ def _extract_sub(st, is_sub, cap_sub):
     return sub, take, overflow
 
 
-def solve_store(plan: MeshPlan, cfg: ListRankConfig, specs: list[LevelSpec],
-                owner_of, st, key, level: int, stats, forced=None,
-                want_sink: bool = True):
-    """Recursively solve the instance in ``st``.
+def base_level(plan: MeshPlan, cfg: ListRankConfig, spec: LevelSpec,
+               owner_of, st, stats):
+    """The recursion's base case: pointer doubling (or all-gather)."""
+    if cfg.base_case == "allgather":
+        st, pst = allgather_solve(plan, st, spec.max_rounds)
+    else:
+        st, pst = doubling_solve(plan, st, owner_of, spec.gather_req_cap,
+                                 spec.gather_resp_cap, spec.max_rounds,
+                                 dedup=cfg.dedup_requests)
+    stats = _merge(stats, {"pd_rounds": pst["pd_rounds"],
+                           "pd_msgs": pst["pd_msgs"],
+                           "undelivered": pst["pd_undelivered"]})
+    return st, stats
 
-    Returns sink-ranking (succ -> the self-loop end of each list, rank =
-    weighted distance to it) when ``want_sink``; otherwise the raw
-    initial-ranking that forward chasing produces (used by the faithful
-    Algorithm-1 variant, whose input is the reversed instance).
 
-    Internal recursion always requests sink-ranking: the extracted
-    subproblem's self-loop ends are exactly this level's unreached
-    initials, which is what ruler propagation composes with."""
-    spec = specs[level]
-
-    if spec.base:
-        if cfg.base_case == "allgather":
-            st, pst = allgather_solve(plan, st, spec.max_rounds)
-        else:
-            st, pst = doubling_solve(plan, st, owner_of, spec.gather_req_cap,
-                                     spec.gather_resp_cap, spec.max_rounds,
-                                     dedup=cfg.dedup_requests)
-        stats = _merge(stats, {"pd_rounds": pst["pd_rounds"],
-                               "pd_msgs": pst["pd_msgs"],
-                               "undelivered": pst["pd_undelivered"]})
-        return st, stats
-
+def descend_level(plan: MeshPlan, cfg: ListRankConfig, spec: LevelSpec,
+                  owner_of, st, key, level: int, stats, forced=None):
+    """The downward half of one recursion level: chase + subproblem
+    extraction. Returns ``(st, sub, take, is_sub, is_term, stats)`` —
+    everything :func:`ascend_level` needs to finish the level once the
+    subproblem is solved (the tuple is a level-boundary checkpointable
+    pytree, see api/resume)."""
     cap = st.ids.shape[0]
     is_term = st.valid & (st.succ == st.ids)
     visited = is_term | ~st.valid
@@ -452,10 +447,16 @@ def solve_store(plan: MeshPlan, cfg: ListRankConfig, specs: list[LevelSpec],
     sub, take, overflow = _extract_sub(st, is_sub, spec.cap_sub)
     stats = _merge(stats, {"sub_overflow": overflow,
                            "sub_size": jnp.sum(sub.valid).astype(jnp.int32)})
+    return st, sub, take, is_sub, is_term, stats
 
-    sub, stats = solve_store(plan, cfg, specs, owner_of, sub, key, level + 1,
-                             stats, want_sink=True)
 
+def ascend_level(plan: MeshPlan, cfg: ListRankConfig, spec: LevelSpec,
+                 owner_of, st, sub, take, is_sub, is_term, stats,
+                 want_sink: bool = True):
+    """The upward half of one recursion level: write back the solved
+    subproblem, propagate through rulers, flip direction if the caller
+    wants sink-ranking."""
+    cap = st.ids.shape[0]
     # write back solved sub elements
     idx = jnp.where(sub.valid, take, cap)
     st = st.replace(succ=st.succ.at[idx].set(sub.succ, mode="drop"),
@@ -478,3 +479,36 @@ def solve_store(plan: MeshPlan, cfg: ListRankConfig, specs: list[LevelSpec],
     if want_sink:
         st, stats = flip_direction(plan, spec, owner_of, st, is_term, stats)
     return st, stats
+
+
+def solve_store(plan: MeshPlan, cfg: ListRankConfig, specs: list[LevelSpec],
+                owner_of, st, key, level: int, stats, forced=None,
+                want_sink: bool = True):
+    """Recursively solve the instance in ``st``.
+
+    Returns sink-ranking (succ -> the self-loop end of each list, rank =
+    weighted distance to it) when ``want_sink``; otherwise the raw
+    initial-ranking that forward chasing produces (used by the faithful
+    Algorithm-1 variant, whose input is the reversed instance).
+
+    Internal recursion always requests sink-ranking: the extracted
+    subproblem's self-loop ends are exactly this level's unreached
+    initials, which is what ruler propagation composes with.
+
+    The body is exactly ``descend_level`` → recurse → ``ascend_level``
+    (``base_level`` at the bottom) — the same stage functions the
+    level-resumable driver (api/resume) runs one at a time, so the
+    monolithic and staged programs are op-for-op identical."""
+    spec = specs[level]
+
+    if spec.base:
+        return base_level(plan, cfg, spec, owner_of, st, stats)
+
+    st, sub, take, is_sub, is_term, stats = descend_level(
+        plan, cfg, spec, owner_of, st, key, level, stats, forced)
+
+    sub, stats = solve_store(plan, cfg, specs, owner_of, sub, key, level + 1,
+                             stats, want_sink=True)
+
+    return ascend_level(plan, cfg, spec, owner_of, st, sub, take, is_sub,
+                        is_term, stats, want_sink)

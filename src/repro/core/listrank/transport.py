@@ -283,16 +283,22 @@ def device_run(mesh, pe_axes: Sequence[str], fn, in_specs, out_specs):
     for name in reversed(pe_axes):
         body = jax.vmap(body, axis_name=name, in_axes=in_axes, out_axes=0)
 
+    def fold_leaf(x):
+        x = jnp.asarray(x)
+        if x.shape[0] % flat != 0:
+            raise ValueError(
+                f"sharded input of size {x.shape[0]} not divisible "
+                f"by virtual PE count {flat}")
+        return x.reshape(sizes + (-1,) + x.shape[1:])
+
     def runner(*args):
         margs = []
         for spec, x in zip(in_specs, args):
             if _spec_is_sharded(spec):
-                x = jnp.asarray(x)
-                if x.shape[0] % flat != 0:
-                    raise ValueError(
-                        f"sharded input of size {x.shape[0]} not divisible "
-                        f"by virtual PE count {flat}")
-                margs.append(x.reshape(sizes + (-1,) + x.shape[1:]))
+                # the spec is a pytree *prefix* of the argument (shard_map
+                # convention): fold the PE axis of every leaf, so whole
+                # state pytrees (stores, stat dicts) ride as one arg.
+                margs.append(jax.tree.map(fold_leaf, x))
             else:
                 margs.append(x)
         out = body(*margs)

@@ -39,6 +39,8 @@ import dataclasses
 import math
 from typing import Sequence
 
+import numpy as np
+
 from repro.core.listrank import analysis
 from repro.core.listrank.config import IndirectionSpec, ListRankConfig
 
@@ -203,6 +205,33 @@ _ALL_FAMILIES = ("chase", "sub", "gather", "graph")
 AMBIGUOUS_STATS = ("undelivered",)
 
 
+def normalize_level_scales(scales, n_levels: int) -> tuple[CapacityScales, ...]:
+    """Broadcast a single :class:`CapacityScales` (or pass through a
+    sequence) to one entry per recursion level (``srs_rounds`` chase
+    levels + the base level). Per-level scales are what makes
+    level-resume sound: escalating level k must not change the static
+    shapes of the already-checkpointed levels < k."""
+    if isinstance(scales, CapacityScales):
+        return (scales,) * n_levels
+    scales = tuple(scales)
+    if len(scales) != n_levels:
+        raise ValueError(
+            f"expected {n_levels} per-level scales, got {len(scales)}")
+    return scales
+
+
+def escalate_levels(level_scales: Sequence[CapacityScales], level: int,
+                    stats: dict, factor: float = 2.0
+                    ) -> tuple[CapacityScales, ...]:
+    """Level-resume escalation: rescale the implicated families at the
+    faulting level and every level below it in the recursion (>= level),
+    leaving completed levels' scales — and therefore their checkpointed
+    store shapes — untouched."""
+    level = max(level, 0)
+    return tuple(escalate(s, stats, factor) if k >= level else s
+                 for k, s in enumerate(level_scales))
+
+
 def escalate(scales: CapacityScales, stats: dict,
              factor: float = 2.0) -> CapacityScales:
     """Rescale only the capacity families implicated by the fatal stats
@@ -226,3 +255,78 @@ def escalate(scales: CapacityScales, stats: dict,
         bump = set(_ALL_FAMILIES)
     return dataclasses.replace(
         scales, **{f: getattr(scales, f) * factor for f in bump})
+
+
+# --------------------------------------------------------------------------
+# sampled-splitter capacity estimation
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CapacityEstimate:
+    """Measured per-hop destination skew, replacing the static slack
+    guess (Robust-Massively-Parallel-Sorting-style splitter sampling).
+
+    ``hop_slack[i]`` is the effective capacity-slack multiplier for hop
+    i of the indirection: expected hottest-bucket load over the uniform
+    load, plus a DKW sampling margin and an oversampling guard. With a
+    uniform instance it collapses to ~``guard``; a skewed instance
+    (hotspot owners) raises exactly the hops that will see the skew.
+    """
+    hop_slack: tuple[float, ...]
+    max_frac: tuple[float, ...]   #: hottest-bucket sample fraction per hop
+    sample_size: int
+
+    def slack_for_hop(self, i: int) -> float:
+        return self.hop_slack[i]
+
+
+def estimate_capacities(succ, plan, m: int, cfg: ListRankConfig,
+                        sample_size: int | None = None, seed: int = 0,
+                        guard: float = 1.25) -> CapacityEstimate:
+    """Estimate per-hop mailbox slack from a sample of the instance.
+
+    Chase waves and gathers address the *owner of succ[x]* for (nearly)
+    uniformly random x — the ruler set is a random sample of elements.
+    So a host-side sample of ``succ`` destinations, bucketed by each
+    hop's routing coordinate, estimates the per-hop load skew the solver
+    will see. The hottest-bucket fraction f̂ plus an additive
+    DKW/Hoeffding margin sqrt(ln(2s)/2k) bounds the true f w.h.p.;
+    capacity is then sized for f·s times the uniform per-bucket load
+    instead of a static ``capacity_slack`` guess.
+
+    Deterministic (seeded numpy) and purely host-side: the estimate
+    feeds ``api.build_specs`` before the first attempt.
+    """
+    succ = np.asarray(succ)
+    n = succ.shape[0]
+    k = min(int(sample_size or cfg.estimation_sample), n)
+    rng = np.random.default_rng(np.uint32(seed) ^ np.uint32(0x5EED))
+    idx = (rng.choice(n, size=k, replace=False) if k < n
+           else np.arange(n, dtype=np.int64))
+    owners = (succ[idx] // m).astype(np.int64)
+
+    hop_slack, max_frac = [], []
+    for hop in plan.indirection.hops:
+        s = plan.hop_size(hop)
+        coords = _hop_coord_np(plan, owners, hop)
+        hist = np.bincount(coords, minlength=s)
+        f_hat = float(hist.max()) / max(k, 1)
+        margin = math.sqrt(math.log(2.0 * s + 2.0) / (2.0 * max(k, 1)))
+        f_est = min(1.0, f_hat + margin)
+        hop_slack.append(max(guard, f_est * s * guard))
+        max_frac.append(f_hat)
+    return CapacityEstimate(hop_slack=tuple(hop_slack),
+                            max_frac=tuple(max_frac), sample_size=k)
+
+
+def _hop_coord_np(plan, pe_ids: np.ndarray, hop: tuple[str, ...]) -> np.ndarray:
+    """Host-side (numpy) mirror of ``MeshPlan.hop_coord``."""
+    coord = np.zeros_like(pe_ids)
+    for a in hop:
+        i = plan.pe_axes.index(a)
+        stride = 1
+        for sz in plan.axis_sizes[i + 1:]:
+            stride *= sz
+        c = (pe_ids // stride) % plan.axis_sizes[i]
+        coord = coord * plan.axis_sizes[i] + c
+    return coord

@@ -39,6 +39,14 @@ class SupervisorConfig:
     async_save: bool = True
 
 
+@dataclasses.dataclass
+class SolveSupervisorConfig(SupervisorConfig):
+    """Supervisor defaults for the list-ranking solver's staged attempt
+    loop: a solve has few (tens of) stage boundaries, so checkpoint at
+    every level boundary rather than every 50 training steps."""
+    ckpt_every: int = 1
+
+
 class Preempted(Exception):
     pass
 
@@ -120,3 +128,91 @@ class Supervisor:
                         None, self._restore_like(), self._shardings)
         self.ckpt.wait()
         return state, step
+
+
+class SolveSupervisor:
+    """The :class:`Supervisor` adapted to the list-ranking solver's
+    level-resumable stage loop (``repro.core.listrank.resume``).
+
+    Unlike the training supervisor, the step loop lives in the solver
+    driver (stages have heterogeneous state structures that only the
+    driver can rebuild); this class owns the supervision concerns the
+    driver delegates:
+
+      - the :class:`~repro.checkpoint.Checkpointer` (atomic keep-k,
+        async) with per-boundary cadence (``cfg.ckpt_every``, default
+        every level boundary);
+      - SIGTERM/SIGINT preemption flag (``install_signal_handlers`` /
+        :attr:`preempted`); the driver writes a blocking checkpoint and
+        raises :class:`Preempted`;
+      - restart accounting (``should_retry``) and straggler detection
+        over per-stage wall times;
+      - ``stats`` threaded into the solver's ``host_stats["recovery"]``
+        (restarts, stragglers, checkpoints, preempted, resumed_from).
+
+    Checkpoints store the boundary-state pytree as full host arrays plus
+    a manifest ``meta`` (schedule index, per-level capacity scales,
+    attempt/escalation path, instance fingerprint), so a solve
+    checkpointed on the 8-device mesh restores under simshard at any
+    point and vice versa — the driver validates the fingerprint and
+    re-places leaves for whatever backend it is running on.
+    """
+
+    def __init__(self, cfg: SupervisorConfig | None = None):
+        self.cfg = cfg or SolveSupervisorConfig()
+        self.ckpt = Checkpointer(self.cfg.ckpt_dir, keep=self.cfg.keep,
+                                 async_save=self.cfg.async_save)
+        self._preempted = False
+        self._restarts = 0
+        self._times: deque[float] = deque(maxlen=self.cfg.straggler_window)
+        self.stats = {"restarts": 0, "stragglers": 0, "checkpoints": 0,
+                      "preempted": 0, "resumed_from": -1}
+
+    # ---------------------------------------------------------- signals
+    def install_signal_handlers(self):
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            signal.signal(sig, self._on_signal)
+
+    def _on_signal(self, *_):
+        self._preempted = True
+
+    def preempt(self):
+        """Set the preemption flag (what a SIGTERM does); test hook and
+        the target of the ``preempt`` fault injection."""
+        self._preempted = True
+
+    @property
+    def preempted(self) -> bool:
+        return self._preempted
+
+    # ------------------------------------------------------ checkpoints
+    def boundary(self, idx: int, state, meta: dict, blocking: bool = False):
+        """Record a completed stage boundary; checkpoints on the
+        ``ckpt_every`` cadence (or unconditionally when blocking)."""
+        if blocking or idx % max(self.cfg.ckpt_every, 1) == 0:
+            self.ckpt.save(idx, state, blocking=blocking, meta=meta)
+            self.stats["checkpoints"] += 1
+
+    def latest_meta(self) -> dict | None:
+        """The manifest ``meta`` of the latest checkpoint, or None."""
+        if self.ckpt.latest_step() is None:
+            return None
+        return self.ckpt.manifest().get("meta")
+
+    def restore(self, like, shardings=None):
+        return self.ckpt.restore(None, like, shardings)
+
+    # ------------------------------------------------------- accounting
+    def note_stage_time(self, dt: float):
+        if len(self._times) >= 8:
+            med = sorted(self._times)[len(self._times) // 2]
+            if dt > self.cfg.straggler_factor * med:
+                self.stats["stragglers"] += 1
+        self._times.append(dt)
+
+    def should_retry(self) -> bool:
+        """Account one crash/corruption recovery; False once the restart
+        budget is exhausted."""
+        self._restarts += 1
+        self.stats["restarts"] = self._restarts
+        return self._restarts <= self.cfg.max_restarts

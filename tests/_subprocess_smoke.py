@@ -336,8 +336,78 @@ def suite_graphalg():
           and np.array_equal(gs.postorder, post))
 
 
+# --------------------------------------------------------------------------
+# faultinject: recovery + elastic checkpoint restore on real devices.
+# The cross-backend halves (mesh checkpoint -> simshard resume and the
+# reverse) can only run where a real mesh exists, so they live here; the
+# rest of the recovery matrix is in-process (tests/test_faultinject.py).
+# --------------------------------------------------------------------------
+
+def suite_faultinject():
+    import tempfile
+    from _simshard_cases import (AXES as G_AXES, SHAPE as G_SHAPE,
+                                 case_record, golden_cases, load_golden)
+    from repro.core.listrank import FaultSpec, sim_mesh
+    from repro.runtime.fault_tolerance import (Preempted, SolveSupervisor,
+                                               SolveSupervisorConfig)
+
+    name = "list-g1-s1"
+    s, r, cfg = next((s, r, c) for nm, s, r, c in golden_cases()
+                     if nm == name)
+    gold = load_golden(name)
+    dev_mesh = compat.make_mesh(G_SHAPE, G_AXES)
+    backends = {"mesh": lambda: dev_mesh,
+                "sim": lambda: sim_mesh(G_SHAPE, G_AXES)}
+
+    def sup(d):
+        return SolveSupervisor(SolveSupervisorConfig(ckpt_dir=d))
+
+    # elastic restore: preempt on one backend, resume on the other; the
+    # finished record must equal the committed golden exactly.
+    for src, dst in (("mesh", "sim"), ("sim", "mesh")):
+        with tempfile.TemporaryDirectory() as d:
+            preempted = False
+            try:
+                rank_list_with_stats(
+                    s, r, backends[src](), cfg=cfg, supervisor=sup(d),
+                    inject=FaultSpec("preempt", stage="descend", level=0))
+            except Preempted:
+                preempted = True
+            check(f"preempt on {src}", preempted)
+            sf, rf, stats = rank_list_with_stats(
+                s, r, backends[dst](), cfg=cfg, supervisor=sup(d))
+            check(f"elastic restore {src}->{dst}",
+                  case_record(sf, rf, stats) == gold
+                  and stats["recovery"]["resumed_from"] == 2
+                  and stats["stage_log"] == ("base@1", "ascend@0", "post"))
+
+    # crash recovery on the real mesh: restore from the level boundary,
+    # never re-executing the completed levels.
+    with tempfile.TemporaryDirectory() as d:
+        sf, rf, stats = rank_list_with_stats(
+            s, r, dev_mesh, cfg=cfg, supervisor=sup(d),
+            inject=FaultSpec("pe_loss", stage="base"))
+        check("mesh pe_loss recovery",
+              case_record(sf, rf, stats) == gold
+              and stats["recovery"]["restarts"] == 1
+              and stats["recovery"]["resumed_from"] == 2
+              and stats["stage_log"].count("descend@0") == 1)
+
+    # injected overflow: escalate-and-resume reproduces the golden bytes
+    sf, rf, stats = rank_list_with_stats(
+        s, r, dev_mesh, cfg=cfg,
+        inject=FaultSpec("overflow", stage="descend", level=0,
+                         family="chase"))
+    rec = case_record(sf, rf, stats)
+    check("mesh injected overflow",
+          rec["succ_sha256"] == gold["succ_sha256"]
+          and rec["rank_sha256"] == gold["rank_sha256"]
+          and stats["attempts"] == 2)
+
+
 SUITES = {"exchange": suite_exchange, "listrank": suite_listrank,
-          "treealg": suite_treealg, "graphalg": suite_graphalg}
+          "treealg": suite_treealg, "graphalg": suite_graphalg,
+          "faultinject": suite_faultinject}
 
 
 def main():

@@ -1,0 +1,363 @@
+"""Fault-injection + recovery tests for the level-resumable solver
+(``repro.core.listrank.resume`` + ``runtime.fault_tolerance.
+SolveSupervisor``), in-process on the simshard backend at the golden
+mesh shape (p=8) so every recovery path pins byte-identity against the
+committed mesh goldens (tests/golden/).
+
+Marked ``faultinject`` — CI runs ``-m faultinject`` as its own job; the
+mesh-backend + cross-backend (elastic restore) half lives in
+``tests/_subprocess_smoke.py`` suite ``faultinject`` (see TESTING.md).
+"""
+import os
+import signal
+
+import numpy as np
+import pytest
+
+from _simshard_cases import AXES, SHAPE, case_record, golden_cases, load_golden
+from repro.checkpoint import Checkpointer, CheckpointWriteError
+from repro.core.listrank import (FaultSpec, SolveExhausted,
+                                 rank_list_with_stats, sim_mesh, tuner)
+from repro.core.listrank.config import ListRankConfig
+from repro.runtime.fault_tolerance import (Preempted, SolveSupervisor,
+                                           SolveSupervisorConfig)
+
+pytestmark = pytest.mark.faultinject
+
+CASES = {name: (s, r, cfg) for name, s, r, cfg in golden_cases()}
+
+
+def mesh8():
+    return sim_mesh(SHAPE, AXES)
+
+
+def sup(tmp_path, **kw):
+    return SolveSupervisor(SolveSupervisorConfig(
+        ckpt_dir=str(tmp_path / "ckpt"), **kw))
+
+
+def counters_of(stats):
+    return {k: v for k, v in sorted(stats.items())
+            if isinstance(v, int) and k != "attempts"}
+
+
+def escalated(cfg, level, stat):
+    """The per-level scale vector after one escalation of ``stat`` at
+    ``level`` — what an injected overflow there leaves behind."""
+    base = tuner.normalize_level_scales(tuner.CapacityScales(),
+                                        cfg.srs_rounds + 1)
+    return tuner.escalate_levels(base, level, {stat: 1})
+
+
+# --------------------------------------------------------------------------
+# injected overflows: level resume + escalation, bit-identity
+# --------------------------------------------------------------------------
+
+def test_overflow_at_chase_level_resumes_and_matches():
+    """Forced chase overflow at descend@0: the stage re-runs with only
+    the chase family escalated; ranks match the committed golden and
+    the full counters match a straight-through solve that starts from
+    the escalated scales (resume == straight-through, bit for bit)."""
+    s, r, cfg = CASES["list-g1-s1"]
+    gold = load_golden("list-g1-s1")
+    sf, rf, stats = rank_list_with_stats(
+        s, r, mesh8(), cfg=cfg,
+        inject=FaultSpec("overflow", stage="descend", level=0,
+                         family="chase"))
+    rec = case_record(sf, rf, stats)
+    assert rec["succ_sha256"] == gold["succ_sha256"]
+    assert rec["rank_sha256"] == gold["rank_sha256"]
+    assert stats["attempts"] == 2
+    assert stats["scales_log"].split(";")[1].startswith("chase=2")
+    assert stats["recovery"]["injected"] == ("overflow:chase:descend@0",)
+    assert stats["stage_log"].count("descend@0!overflow") == 1
+    assert stats["stage_log"].count("descend@0") == 1
+
+    sf2, rf2, stats2 = rank_list_with_stats(
+        s, r, mesh8(), cfg=cfg,
+        initial_scales=escalated(cfg, 0, "dropped"))
+    assert np.array_equal(np.asarray(sf), np.asarray(sf2))
+    assert np.array_equal(np.asarray(rf), np.asarray(rf2))
+    assert counters_of(stats) == counters_of(stats2)
+
+
+def test_overflow_at_base_level_does_not_reexecute_chase_levels():
+    """Forced gather overflow at the base level of a two-level
+    recursion: only base@2 re-runs (levels < 2 execute exactly once),
+    the escalation is tagged with its level, and the result is
+    bit-identical to the straight-through escalated solve."""
+    s, r, cfg = CASES["euler-forest-s4"]
+    gold = load_golden("euler-forest-s4")
+    sf, rf, stats = rank_list_with_stats(
+        s, r, mesh8(), cfg=cfg,
+        inject=FaultSpec("overflow", stage="base", family="gather"))
+    rec = case_record(sf, rf, stats)
+    assert rec["succ_sha256"] == gold["succ_sha256"]
+    assert rec["rank_sha256"] == gold["rank_sha256"]
+    assert stats["attempts"] == 2
+    assert stats["scales_log"].split(";")[1].endswith("@L2")
+    log = stats["stage_log"]
+    for label in ("prep", "descend@0", "descend@1", "ascend@1", "ascend@0",
+                  "post"):
+        assert log.count(label) == 1, (label, log)
+    assert log.count("base@2!overflow") == 1 and log.count("base@2") == 1
+
+    sf2, rf2, stats2 = rank_list_with_stats(
+        s, r, mesh8(), cfg=cfg,
+        initial_scales=escalated(cfg, 2, "undelivered"))
+    assert np.array_equal(np.asarray(sf), np.asarray(sf2))
+    assert np.array_equal(np.asarray(rf), np.asarray(rf2))
+    assert counters_of(stats) == counters_of(stats2)
+
+
+def test_exhaustion_error_is_structured():
+    """SolveExhausted carries the full escalation path and the fatal
+    stats/families of the failing attempt (satellite: structured
+    exhaustion errors)."""
+    s, r, cfg = CASES["escalate-s6"]
+    with pytest.raises(SolveExhausted) as ei:
+        rank_list_with_stats(s, r, mesh8(), cfg=cfg, max_retries=1)
+    e = ei.value
+    assert e.attempts == 2
+    assert len(e.scales_log) == 2
+    assert e.scales_log[0] == "chase=1,sub=1,gather=1,graph=1"
+    assert e.fatal.get("sub_overflow", 0) > 0
+    assert "sub" in e.families
+    assert e.stats["sub_overflow"] > 0
+    assert "escalation path" in str(e)
+
+
+# --------------------------------------------------------------------------
+# crash (PE loss) + corruption: checkpoint restore, no re-execution
+# --------------------------------------------------------------------------
+
+def test_pe_loss_at_base_restores_from_level_boundary(tmp_path):
+    """An injected PE loss at the base level restores from the
+    descend@0 boundary checkpoint: level 0 is not re-executed (asserted
+    on the stage log and the per-stage collective counts), and the
+    result is byte-identical to the committed golden."""
+    s, r, cfg = CASES["list-g1-s1"]
+    gold = load_golden("list-g1-s1")
+    supervisor = sup(tmp_path)
+    sf, rf, stats = rank_list_with_stats(
+        s, r, mesh8(), cfg=cfg, supervisor=supervisor,
+        inject=FaultSpec("pe_loss", stage="base"), stage_counters=True)
+    assert case_record(sf, rf, stats) == gold
+    rec = stats["recovery"]
+    assert rec["restarts"] == 1
+    assert rec["resumed_from"] == 2          # boundary after descend@0
+    assert rec["injected"] == ("pe_loss:base@1",)
+    log = stats["stage_log"]
+    assert log.count("prep") == 1 and log.count("descend@0") == 1
+    assert log.count("base@1!InjectedFault") == 1 and log.count("base@1") == 1
+    # collective-count regression: each committed stage traced exactly
+    # once — a resume must not re-execute the collectives of levels < k.
+    labels = [lbl for lbl, _ in stats["stage_collectives"]]
+    assert labels == ["prep", "descend@0", "base@1", "ascend@0", "post"]
+    counts = dict(stats["stage_collectives"])
+    assert dict(counts["descend@0"]).get("all_to_all", 0) > 0
+
+
+def test_pe_loss_without_checkpoint_restarts_from_scratch():
+    """No supervisor: a crash falls back to a scratch restart (bounded
+    by max_retries) and still reproduces the golden bytes."""
+    s, r, cfg = CASES["list-g1-s1"]
+    gold = load_golden("list-g1-s1")
+    sf, rf, stats = rank_list_with_stats(
+        s, r, mesh8(), cfg=cfg, inject=FaultSpec("pe_loss", stage="base"))
+    assert case_record(sf, rf, stats) == gold
+    assert stats["recovery"]["restarts"] == 1
+    assert stats["stage_log"].count("prep") == 2  # scratch restart
+
+
+def test_corruption_detected_and_recovered(tmp_path):
+    """A corrupted store plane after descend@0 is caught by boundary
+    validation BEFORE it is checkpointed; the driver restores the prep
+    boundary and re-runs the level cleanly."""
+    s, r, cfg = CASES["list-g1-s1"]
+    gold = load_golden("list-g1-s1")
+    supervisor = sup(tmp_path)
+    sf, rf, stats = rank_list_with_stats(
+        s, r, mesh8(), cfg=cfg, supervisor=supervisor,
+        inject=FaultSpec("corrupt", stage="descend", level=0, pe=3,
+                         plane="succ"))
+    assert case_record(sf, rf, stats) == gold
+    rec = stats["recovery"]
+    assert rec["restarts"] == 1
+    assert rec["resumed_from"] == 1          # boundary after prep
+    assert rec["injected"] == ("corrupt:descend@0",)
+    assert stats["stage_log"].count("descend@0!CorruptedState") == 1
+    assert stats["stage_log"].count("prep") == 1
+
+
+# --------------------------------------------------------------------------
+# preemption: SIGTERM-clean exit + restore-on-restart
+# --------------------------------------------------------------------------
+
+def test_preemption_mid_solve_checkpoints_and_resumes(tmp_path):
+    """Preemption after descend@0 writes a blocking checkpoint and
+    raises Preempted; a fresh supervisor on the same directory resumes
+    from that boundary and the finished solve is byte-identical to the
+    committed golden — counters included (elastic restore is exact)."""
+    s, r, cfg = CASES["list-g1-s1"]
+    gold = load_golden("list-g1-s1")
+    supervisor = sup(tmp_path)
+    with pytest.raises(Preempted):
+        rank_list_with_stats(
+            s, r, mesh8(), cfg=cfg, supervisor=supervisor,
+            inject=FaultSpec("preempt", stage="descend", level=0))
+    assert supervisor.stats["preempted"] == 1
+    assert supervisor.ckpt.latest_step() == 2
+    assert supervisor.latest_meta()["idx"] == 2
+
+    resumed = sup(tmp_path)
+    sf, rf, stats = rank_list_with_stats(s, r, mesh8(), cfg=cfg,
+                                         supervisor=resumed)
+    assert case_record(sf, rf, stats) == gold
+    assert stats["recovery"]["resumed_from"] == 2
+    assert stats["stage_log"] == ("base@1", "ascend@0", "post")
+
+
+def test_sigterm_sets_preempt_flag_and_exits_cleanly(tmp_path):
+    """The real signal path: SIGTERM flips the supervisor flag and the
+    driver exits with Preempted at the next boundary check."""
+    s, r, cfg = CASES["list-g1-s1"]
+    supervisor = sup(tmp_path)
+    old = {sig: signal.getsignal(sig)
+           for sig in (signal.SIGTERM, signal.SIGINT)}
+    try:
+        supervisor.install_signal_handlers()
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert supervisor.preempted
+        with pytest.raises(Preempted):
+            rank_list_with_stats(s, r, mesh8(), cfg=cfg,
+                                 supervisor=supervisor)
+    finally:
+        for sig, h in old.items():
+            signal.signal(sig, h)
+    # nothing ran, nothing checkpointed; a later run starts clean
+    assert supervisor.ckpt.latest_step() is None
+
+
+def test_supervisor_stats_threaded_into_host_stats(tmp_path):
+    """Satellite: Supervisor accounting rides in host_stats["recovery"]
+    — and never perturbs the pinned integer counters (it is a dict)."""
+    s, r, cfg = CASES["list-g1-s1"]
+    gold = load_golden("list-g1-s1")
+    supervisor = sup(tmp_path)
+    sf, rf, stats = rank_list_with_stats(s, r, mesh8(), cfg=cfg,
+                                         supervisor=supervisor)
+    assert case_record(sf, rf, stats) == gold
+    rec = stats["recovery"]
+    assert rec["checkpoints"] == 4           # one per interior boundary
+    assert rec["restarts"] == 0 and rec["preempted"] == 0
+    assert rec["resumed_from"] == -1 and rec["injected"] == ()
+
+
+# --------------------------------------------------------------------------
+# checkpointer hardening (satellites)
+# --------------------------------------------------------------------------
+
+def test_async_write_failure_surfaces_with_step(tmp_path, monkeypatch):
+    ckpt = Checkpointer(tmp_path / "c", keep=3, async_save=True)
+    state = {"x": np.arange(4)}
+    ckpt.save(1, state)
+    ckpt.wait()
+
+    def boom(*a, **kw):
+        raise OSError("disk on fire")
+
+    monkeypatch.setattr(np, "savez", boom)
+    ckpt.save(2, state)                      # background write will fail
+    with pytest.raises(CheckpointWriteError) as ei:
+        ckpt.save(3, state)                  # surfaces step 2's failure
+    assert ei.value.step == 2
+    assert "step 2" in str(ei.value)
+    assert isinstance(ei.value.__cause__, OSError)
+    monkeypatch.undo()
+    ckpt.save(3, state, blocking=True)       # recoverable afterwards
+    assert ckpt.latest_step() == 3
+
+
+def test_gc_never_deletes_the_step_being_written(tmp_path):
+    """Out-of-order publish: gc ranks steps by name, so a freshly
+    written low-numbered step must be protected from its own gc."""
+    ckpt = Checkpointer(tmp_path / "c", keep=2, async_save=False)
+    state = {"x": np.arange(4)}
+    ckpt.save(5, state)
+    ckpt.save(6, state)
+    ckpt.save(1, state)                      # older step than the kept set
+    dirs = sorted(d.name for d in (tmp_path / "c").glob("step_*"))
+    assert "step_00000001" in dirs           # protected, not gc'd
+    (ckpt.restore(1, {"x": np.zeros(4, np.int64)}))  # and restorable
+
+
+# --------------------------------------------------------------------------
+# sampled-splitter capacity estimation (satellite of the tentpole)
+# --------------------------------------------------------------------------
+
+def test_estimation_detects_destination_skew():
+    """A hotspot instance (most successors owned by PE 0) must raise
+    the estimated hop slack well above the uniform ~guard level."""
+    n, p = 512, 8
+    m = n // p
+    rng = np.random.default_rng(0)
+    succ = rng.integers(0, m, size=n)        # everything points at PE 0
+    succ[::7] = rng.integers(0, n, size=len(succ[::7]))
+    from repro.core.listrank.exchange import MeshPlan
+    plan = MeshPlan.from_mesh(mesh8(), AXES, None)
+    cfg = ListRankConfig()
+    est = tuner.estimate_capacities(succ, plan, m, cfg)
+    uni = tuner.estimate_capacities(
+        rng.permutation(n).astype(np.int64), plan, m, cfg)
+    assert est.hop_slack[0] > 2 * uni.hop_slack[0]
+    assert est.max_frac[0] > 0.5
+    assert est.sample_size == min(cfg.estimation_sample, n)
+
+
+def test_estimation_end_to_end_first_attempt_clean():
+    """capacity_estimation=True solves the golden case in one attempt
+    with byte-identical ranks (capacities never change results)."""
+    s, r, cfg = CASES["list-g1-s1"]
+    gold = load_golden("list-g1-s1")
+    sf, rf, stats = rank_list_with_stats(
+        s, r, mesh8(), cfg=cfg.with_(capacity_estimation=True))
+    rec = case_record(sf, rf, stats)
+    assert rec["succ_sha256"] == gold["succ_sha256"]
+    assert rec["rank_sha256"] == gold["rank_sha256"]
+    assert stats["attempts"] == 1
+
+
+def test_estimated_specs_track_skew_in_mail_caps():
+    """build_specs consumes the estimate: a skewed instance gets larger
+    mailboxes than the static slack would give, a uniform one does not
+    explode."""
+    from repro.core.listrank import api
+    from repro.core.listrank.exchange import MeshPlan
+    n, p = 512, 8
+    m = n // p
+    rng = np.random.default_rng(1)
+    skew = rng.integers(0, m, size=n)
+    plan = MeshPlan.from_mesh(mesh8(), AXES, None)
+    cfg = ListRankConfig(srs_rounds=1)
+    est = tuner.estimate_capacities(skew, plan, m, cfg)
+    static = api.build_specs(cfg, plan, m, n, 4)
+    sized = api.build_specs(cfg, plan, m, n, 4, estimate=est)
+    # gather caps scale with the store capacity, so the measured skew
+    # shows even at this instance size (mailboxes sit on min_capacity)
+    assert sized[0].gather_req_cap[0] > static[0].gather_req_cap[0]
+    assert sized[0].mail_caps[0] >= static[0].mail_caps[0]
+    assert sized[0].cap_sub == static[0].cap_sub  # sub stays analytic
+
+
+# --------------------------------------------------------------------------
+# fault spec hygiene
+# --------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("meteor")
+    with pytest.raises(ValueError):
+        FaultSpec("overflow", family="warp")
+    f = FaultSpec("overflow", stage="descend", level=1, family="sub")
+    assert f.level == 1

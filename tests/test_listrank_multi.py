@@ -15,7 +15,8 @@ import sys
 
 import pytest
 
-SUITES = ("exchange", "listrank", "treealg", "graphalg")
+SUITES = ("exchange", "listrank", "treealg", "graphalg",
+          pytest.param("faultinject", marks=pytest.mark.faultinject))
 
 
 @pytest.mark.slow

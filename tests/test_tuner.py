@@ -127,9 +127,14 @@ def test_forced_sub_overflow_retry_end_to_end(monkeypatch):
     recorded = []
     orig = api.build_specs
 
-    def spy(cfg, plan, m, n, term_bound, scales=tuner.CapacityScales()):
-        specs = orig(cfg, plan, m, n, term_bound, scales)
-        recorded.append((scales, specs))
+    def spy(cfg, plan, m, n, term_bound, scales=tuner.CapacityScales(),
+            estimate=None):
+        specs = orig(cfg, plan, m, n, term_bound, scales, estimate)
+        sc = tuner.normalize_level_scales(scales, cfg.srs_rounds + 1)
+        # the staged driver rebuilds specs once per executed stage;
+        # record one entry per *distinct* scale vector (= per attempt).
+        if not recorded or recorded[-1][0] != sc:
+            recorded.append((sc, specs))
         return specs
 
     monkeypatch.setattr(api, "build_specs", spy)
@@ -142,8 +147,8 @@ def test_forced_sub_overflow_retry_end_to_end(monkeypatch):
     np.testing.assert_array_equal(np.asarray(s), s_ref)
     np.testing.assert_array_equal(np.asarray(r), r_ref)
     assert stats["attempts"] >= 2, "expected at least one forced retry"
-    first_scales, first_specs = recorded[0]
-    second_scales, second_specs = recorded[1]
+    (first_scales, first_specs), (second_scales, second_specs) = recorded[:2]
+    first_scales, second_scales = first_scales[0], second_scales[0]
     assert (first_scales.chase, first_scales.sub) == (1.0, 1.0)
     # the sub family was escalated, the chase family untouched
     assert second_scales.sub > 1.0
