@@ -26,6 +26,7 @@ import jax  # noqa: E402
 from repro import compat  # noqa: E402
 from repro.core.listrank import (IndirectionSpec, ListRankConfig,  # noqa
                                  analysis, instances, rank_list_with_stats)
+from repro.obs import json_safe_stats  # noqa: E402
 
 MACHINES = {"supermuc": analysis.SUPERMUC, "tpu": analysis.TPU_V5E_ICI,
             "intra": analysis.INTRA_NODE}
@@ -83,10 +84,10 @@ def main():
         "wall_s_max": float(np.max(times)),
         "delta_locality": delta,
         "n": n,
-        # stats carry int counters plus the string-valued
-        # escalation path (scales_log) — pass non-numerics through
-        "stats": {k: (v if isinstance(v, str) else int(v))
-                  for k, v in stats.items()},
+        # stats carry int counters plus strings (scales_log), tuples
+        # (stage_log) and nested dicts (recovery) — the obs layer owns
+        # the canonical JSON-safe conversion
+        "stats": json_safe_stats(stats),
     }
     print("RESULT " + json.dumps(out))
 

@@ -26,6 +26,8 @@ indirection).
 """
 from __future__ import annotations
 
+import argparse
+import datetime
 import json
 import os
 import pathlib
@@ -136,7 +138,8 @@ def fig4_indirection() -> list[dict]:
 
 
 def _subprocess_bench(prefix: str, script: str,
-                      quick_artifact: bool = True) -> list[dict]:
+                      quick_artifact: bool = True,
+                      artifact: str | None = None) -> list[dict]:
     """Run a standalone bench script in a subprocess (its virtual-
     device count must be fixed before jax initializes) and re-emit its
     CSV rows. Quick mode reads the script's own *_quick.json artifact
@@ -151,8 +154,9 @@ def _subprocess_bench(prefix: str, script: str,
         print(f"{prefix}/error,0,rc={proc.returncode}")
         print(proc.stderr[-1000:])
         return []
-    f = RESULTS / (f"{prefix}_quick.json" if QUICK and quick_artifact
-                   else f"{prefix}.json")
+    stem = artifact or prefix
+    f = RESULTS / (f"{stem}_quick.json" if QUICK and quick_artifact
+                   else f"{stem}.json")
     return json.loads(f.read_text()) if f.exists() else []
 
 
@@ -187,6 +191,13 @@ def recovery_bench() -> list[dict]:
                              quick_artifact=False)
 
 
+def obs_residual_bench() -> list[dict]:
+    """Per-stage model-vs-measured residual tables for all five
+    instance families (the flight-recorder gate)."""
+    return _subprocess_bench("obs", "obs_residuals.py",
+                             artifact="obs_residuals")
+
+
 def roofline() -> list[dict]:
     """Aggregate the dry-run JSON artifacts into the roofline table."""
     rows = []
@@ -208,6 +219,93 @@ def roofline() -> list[dict]:
     return rows
 
 
+# --------------------------------------------------------------------------
+# trajectory (perf trend records)
+# --------------------------------------------------------------------------
+
+def _git_rev() -> str:
+    try:
+        proc = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True,
+                              cwd=str(HERE.parent), timeout=30)
+        rev = proc.stdout.strip()
+        return rev if proc.returncode == 0 and rev else "unknown"
+    except OSError:
+        return "unknown"
+
+
+def _headline(name: str, data) -> dict:
+    """Compact per-bench headline numbers for the trend record."""
+    if isinstance(data, dict):
+        # structured artifacts (tuning/graphalg/recovery/...): keep the
+        # scalar top-level fields, count the list-valued sections
+        h = {k: v for k, v in data.items()
+             if isinstance(v, (int, float, bool))
+             or (isinstance(v, str) and len(v) <= 80)}
+        h["rows"] = sum(len(v) for v in data.values()
+                        if isinstance(v, list))
+        return h
+    if not isinstance(data, list) or not data:
+        return {"rows": 0}
+    h = {"rows": len(data)}
+    walls = [r["wall_s_mean"] for r in data
+             if isinstance(r, dict) and "wall_s_mean" in r]
+    if walls:
+        h["wall_s_mean"] = sum(walls) / len(walls)
+    if name.startswith("obs"):
+        summaries = [r.get("summary", {}) for r in data
+                     if isinstance(r, dict)]
+        meas = sum(s.get("measured_s", 0.0) for s in summaries)
+        pred = sum(s.get("predicted_s", 0.0) for s in summaries)
+        h.update(measured_s=meas, predicted_s=pred,
+                 families_ok=sum(1 for r in data
+                                 if isinstance(r, dict) and r.get("ok")))
+    return h
+
+
+def summarize(write: bool = True) -> dict:
+    """Merge benchmarks/results/*.json into one trajectory record and
+    append it to benchmarks/results/trajectory.jsonl.
+
+    Schema per line: ``{"ts", "unix", "git_rev", "quick",
+    "benches": {<result-file-stem>: headline}}`` — the perf trend the
+    BENCH harness tracks across commits.
+    """
+    now = datetime.datetime.now(datetime.timezone.utc)
+    record = {
+        "ts": now.isoformat(timespec="seconds"),
+        "unix": now.timestamp(),
+        "git_rev": _git_rev(),
+        "quick": QUICK,
+        "benches": {},
+    }
+    for f in sorted(RESULTS.glob("*.json")):
+        if f.name == "benchmarks.json":
+            continue
+        try:
+            data = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError):
+            continue
+        if isinstance(data, dict) and "traceEvents" in data:
+            continue  # Chrome-trace artifacts are not bench results
+        record["benches"][f.stem] = _headline(f.stem, data)
+    bj = RESULTS / "benchmarks.json"
+    if bj.exists():
+        try:
+            top = json.loads(bj.read_text())
+            for name, data in top.items():
+                record["benches"].setdefault(name, _headline(name, data))
+        except (OSError, json.JSONDecodeError):
+            pass
+    if write:
+        with open(RESULTS / "trajectory.jsonl", "a") as fh:
+            fh.write(json.dumps(record) + "\n")
+        print(f"# appended trend record ({record['git_rev']}, "
+              f"{len(record['benches'])} benches) to "
+              f"{RESULTS / 'trajectory.jsonl'}")
+    return record
+
+
 def main() -> None:
     RESULTS.mkdir(exist_ok=True)
     out = {}
@@ -220,10 +318,21 @@ def main() -> None:
     out["graphalg"] = graphalg_bench()
     out["simshard"] = simshard_bench()
     out["recovery"] = recovery_bench()
+    out["obs"] = obs_residual_bench()
     out["roofline"] = roofline()
     (RESULTS / "benchmarks.json").write_text(json.dumps(out, indent=1))
     print(f"# wrote {RESULTS / 'benchmarks.json'}")
+    summarize()
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--summary", action="store_true",
+                    help="merge benchmarks/results/*.json into one "
+                         "trajectory record appended to "
+                         "results/trajectory.jsonl (no benches run)")
+    ns = ap.parse_args()
+    if ns.summary:
+        summarize()
+    else:
+        main()

@@ -124,6 +124,20 @@ def derive_caps(edges: np.ndarray, n_pad: int, p: int,
     )
 
 
+#: schema of the graphalg pipeline's stat counters (repro.obs.metrics
+#: ingests them under these help strings; sync with zero_graph_stats).
+GRAPH_STAT_HELP = {
+    "cc_rounds": "hooking + shortcut rounds executed",
+    "cc_msgs": "hooking/shortcut messages routed",
+    "cc_undelivered": "FATAL: hooking-pipeline messages undelivered",
+    "cc_unconverged": "FATAL: labels not converged within round budget",
+    "tour_undelivered": "FATAL: Euler-tour construction undelivered",
+    "tour_msgs": "Euler-tour construction messages",
+    "stats_undelivered": "FATAL: tree-stats scatter undelivered",
+    "forest_edges": "spanning-forest edges selected (gauge)",
+}
+
+
 def zero_graph_stats():
     z = jnp.int32(0)
     return {"cc_rounds": z, "cc_msgs": z, "cc_undelivered": z,

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Sequence
 
 import jax
@@ -49,6 +50,7 @@ from repro.core.listrank import transport as transport_lib
 from repro.core.listrank.srs import _merge, gather_until_done, zero_stats
 from repro.core.graphalg import cc as cc_lib
 from repro.core.graphalg import forest as forest_lib
+from repro.obs import trace as trace_lib
 # the single int32 wire-format id headroom constant (arc ids reach
 # 2*E_pad and must stay addressable)
 from repro.core.treealg.batch import PACKED_ID_LIMIT as _ID_LIMIT
@@ -332,52 +334,103 @@ def pipeline_collective_footprint(edges, n_nodes: int, mesh,
 
 
 def _run_pipeline(edges, n_nodes, mesh, pe_axes, cfg, mode, seed,
-                  max_retries):
+                  max_retries, tracer=None):
     cfg, mesh, plan, edges_pad, base_caps, n_pad, m, e_pad, m_e = _prepare(
         edges, n_nodes, mesh, pe_axes, cfg)
     edges_d = transport_lib.put_sharded(mesh, plan.pe_axes,
                                         jnp.asarray(edges_pad, jnp.int32))
+    tr = trace_lib.ensure(tracer)
 
     scales = tuner.CapacityScales()
     last_stats = None
-    for attempt in range(max_retries + 1):
-        caps = base_caps.scaled(scales.graph)
-        specs = _attempt_specs(cfg, plan, m_e, e_pad, scales)
-        runner = _jitted_pipeline(mesh, plan, cfg, caps, specs, m, m_e,
-                                  mode)
-        out, stats = runner(edges_d, jnp.int32(seed))
-        host_stats = {k: int(jax.device_get(v)) for k, v in stats.items()}
-        host_stats["attempts"] = attempt + 1
-        fatal = sum(host_stats.get(k, 0) for k in FATAL_KEYS)
-        if fatal == 0:
-            host = {k: np.asarray(jax.device_get(v))[:n_nodes]
-                    for k, v in out.items()}
-            return host, host_stats
-        last_stats = host_stats
-        scales = tuner.escalate(scales, host_stats)
+    with tr.span(f"graphalg:{mode}", cat="solve", n_nodes=n_nodes,
+                 p=plan.p, mode=mode,
+                 backend=transport_lib.backend_name(mesh)) as pipe_span:
+        for attempt in range(max_retries + 1):
+            caps = base_caps.scaled(scales.graph)
+            specs = _attempt_specs(cfg, plan, m_e, e_pad, scales)
+            runner = _jitted_pipeline(mesh, plan, cfg, caps, specs, m, m_e,
+                                      mode)
+            att = tr.begin(f"graphalg:{mode}#{attempt + 1}",
+                           cat="stage-attempt", stage=f"graphalg:{mode}",
+                           level=-1, attempt=attempt + 1,
+                           scales=tuner.format_scales(scales))
+            if tr.enabled:
+                att.annotate(**_pipeline_prediction(
+                    runner, edges_pad, plan, cfg, mesh))
+            t0 = time.time()
+            out, stats = runner(edges_d, jnp.int32(seed))
+            jax.block_until_ready(jax.tree.leaves((out, stats)))
+            dt = time.time() - t0
+            host_stats = {k: int(jax.device_get(v)) for k, v in stats.items()}
+            host_stats["attempts"] = attempt + 1
+            fatal = sum(host_stats.get(k, 0) for k in FATAL_KEYS)
+            if fatal == 0:
+                tr.end(att, wall_s=dt, outcome="committed")
+                host = {k: np.asarray(jax.device_get(v))[:n_nodes]
+                        for k, v in out.items()}
+                pipe_span.annotate(attempts=attempt + 1, outcome="ok")
+                if tr.enabled:
+                    from repro.obs import metrics as metrics_lib
+                    metrics_lib.ingest_host_stats(tr.metrics, host_stats,
+                                                  prefix=f"graphalg/{mode}/")
+                return host, host_stats
+            tr.end(att, wall_s=dt, outcome="overflow",
+                   fatal={k: host_stats[k] for k in FATAL_KEYS
+                          if host_stats.get(k, 0) > 0})
+            last_stats = host_stats
+            scales = tuner.escalate(scales, host_stats)
+            tr.instant(f"escalate:graphalg:{mode}", cat="retry",
+                       scales=tuner.format_scales(scales))
+        pipe_span.annotate(outcome="exhausted")
     raise RuntimeError(
         f"graphalg {mode} did not complete after {max_retries + 1} "
         f"attempts; stats={last_stats}")
 
 
+def _pipeline_prediction(runner, edges_pad, plan, cfg, mesh):
+    """Static §2.6 prediction annotations for one pipeline attempt
+    (trace-only; cached per jitted runner — see resume.run_staged)."""
+    from repro.core.listrank import introspect
+    from repro.obs import cost as cost_lib
+    key = id(runner)
+    if key not in _FOOTPRINT_CACHE:
+        _FOOTPRINT_CACHE[key] = introspect.collective_footprint(
+            runner, jnp.asarray(edges_pad, jnp.int32), jnp.int32(0))
+    fprint = _FOOTPRINT_CACHE[key]
+    sim = transport_lib.is_sim(mesh)
+    pred = cost_lib.predict_stage(fprint, plan, cfg.machine, sim)
+    count, nbytes = cost_lib.total_collectives(fprint)
+    if sim:
+        nbytes //= max(plan.p, 1)
+    return {"predicted_s": pred["total_s"], "collective_count": count,
+            "payload_bytes": nbytes,
+            "footprint": cost_lib.footprint_summary(fprint)}
+
+
+#: per-runner footprint cache (runners are pinned by _jitted_pipeline's
+#: lru_cache, so ids are stable while cached).
+_FOOTPRINT_CACHE: dict = {}
+
+
 def connected_components(edges, n_nodes: int, mesh,
                          pe_axes: Sequence[str] | None = None,
                          cfg: ListRankConfig | None = None, seed: int = 0,
-                         max_retries: int = 3):
+                         max_retries: int = 3, tracer=None):
     """Connected components of an undirected edge list on the mesh.
 
     Returns (labels, stats): ``labels[v]`` is the minimum node id of
     v's component (a canonical labeling).
     """
     out, stats = _run_pipeline(edges, n_nodes, mesh, pe_axes, cfg, "cc",
-                               seed, max_retries)
+                               seed, max_retries, tracer=tracer)
     return out["components"], stats
 
 
 def spanning_forest(edges, n_nodes: int, mesh,
                     pe_axes: Sequence[str] | None = None,
                     cfg: ListRankConfig | None = None, seed: int = 0,
-                    max_retries: int = 3):
+                    max_retries: int = 3, tracer=None):
     """Oriented spanning forest of an undirected edge list.
 
     Returns (parent, labels, stats): ``parent`` is a rooted forest of
@@ -386,14 +439,14 @@ def spanning_forest(edges, n_nodes: int, mesh,
     ``treealg`` (``tree_stats`` / ``solve_forest`` / ``root_tree``).
     """
     out, stats = _run_pipeline(edges, n_nodes, mesh, pe_axes, cfg,
-                               "forest", seed, max_retries)
+                               "forest", seed, max_retries, tracer=tracer)
     return out["parent"], out["components"], stats
 
 
 def graph_stats(edges, n_nodes: int, mesh,
                 pe_axes: Sequence[str] | None = None,
                 cfg: ListRankConfig | None = None, seed: int = 0,
-                max_retries: int = 3) -> GraphStats:
+                max_retries: int = 3, tracer=None) -> GraphStats:
     """Components, oriented spanning forest, and per-node tree
     statistics from a raw edge list — one jitted mesh program.
 
@@ -403,7 +456,7 @@ def graph_stats(edges, n_nodes: int, mesh,
     over them).
     """
     out, stats = _run_pipeline(edges, n_nodes, mesh, pe_axes, cfg, "stats",
-                               seed, max_retries)
+                               seed, max_retries, tracer=tracer)
     return GraphStats(components=out["components"], parent=out["parent"],
                       depth=out["depth"], subtree_size=out["subtree_size"],
                       preorder=out["preorder"], postorder=out["postorder"],

@@ -42,6 +42,7 @@ from repro.core.listrank.srs import (LevelSpec, gather_until_done,
                                      zero_stats, _merge)
 from repro.core.listrank import resume as resume_lib
 from repro.core.listrank.resume import FATAL_KEYS, SolveExhausted  # noqa: F401
+from repro.obs import trace as trace_lib
 # (re-exported: graphalg.frontdoor composes FATAL_KEYS; callers catch
 # SolveExhausted from either module.)
 
@@ -340,7 +341,8 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
                          seed: int = 0, max_retries: int = 3,
                          term_bound: int | None = None,
                          supervisor=None, inject=None,
-                         stage_counters: bool = False, initial_scales=None):
+                         stage_counters: bool = False, initial_scales=None,
+                         tracer=None):
     """Rank lists distributed over ``mesh``. Returns (succ, rank, stats).
 
     ``succ``/``rank`` may be numpy or jax arrays of length n (divisible
@@ -359,6 +361,14 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
     (CapacityScales or a per-level sequence). A run that exhausts its
     escalation budget raises :class:`SolveExhausted` carrying the full
     escalation path and the per-family fatal stats.
+
+    ``tracer`` (a :class:`repro.obs.Tracer`) records the flight-recorder
+    span tree for the whole solve — the root ``solve`` span, the
+    capacity-estimation pre-pass, every stage execution/retry with
+    measured wall time and §2.6 predicted time, and checkpoint
+    save/restore — and ingests the final ``host_stats`` into the
+    tracer's metrics registry. Host-side only; the traced programs are
+    bit-identical with tracing on or off.
     """
     cfg = cfg or ListRankConfig()
     pe_axes = tuple(pe_axes) if pe_axes is not None else tuple(mesh.axis_names)
@@ -387,31 +397,59 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
         counts = np.bincount(owners[s_host == np.arange(n)], minlength=p)
         term_bound = int(counts.max()) if counts.size else 0
 
-    estimate = None
-    if cfg.capacity_estimation:
-        # sampled-splitter pre-pass: size mailboxes for the measured
-        # destination skew instead of the static slack guess.
-        if s_host is None:
-            s_host = np.asarray(jax.device_get(succ))
-        estimate = tuner.estimate_capacities(s_host, plan, m, cfg, seed=seed)
+    tr = trace_lib.ensure(tracer)
+    solve_span = tr.begin(
+        "solve", cat="solve", n=n, p=p, backend=backend,
+        algorithm=cfg.algorithm, machine=cfg.machine.name,
+        indirection=[list(h) for h in plan.indirection.hops])
+    try:
+        estimate = None
+        if cfg.capacity_estimation:
+            # sampled-splitter pre-pass: size mailboxes for the measured
+            # destination skew instead of the static slack guess.
+            if s_host is None:
+                s_host = np.asarray(jax.device_get(succ))
+            with tr.span("estimate_capacities", cat="tuner") as est_span:
+                estimate = tuner.estimate_capacities(s_host, plan, m, cfg,
+                                                     seed=seed)
+                est_span.annotate(sample_size=estimate.sample_size,
+                                  hop_slack=list(estimate.hop_slack),
+                                  max_frac=list(estimate.max_frac))
 
-    succ_d = transport_lib.put_sharded(mesh, pe_axes,
-                                       jnp.asarray(succ, jnp.int32))
-    # explicit weight-dtype canonicalization (chase_leaves): int weights
-    # stay integer end-to-end — ±1 tour weights round-trip exactly.
-    wdt = canonical_weight_dtype(
-        rank.dtype if hasattr(rank, "dtype") else np.asarray(rank).dtype)
-    rank_d = transport_lib.put_sharded(mesh, pe_axes, jnp.asarray(rank, wdt))
+        succ_d = transport_lib.put_sharded(mesh, pe_axes,
+                                           jnp.asarray(succ, jnp.int32))
+        # explicit weight-dtype canonicalization (chase_leaves): int
+        # weights stay integer end-to-end — ±1 tour weights round-trip
+        # exactly.
+        wdt = canonical_weight_dtype(
+            rank.dtype if hasattr(rank, "dtype") else np.asarray(rank).dtype)
+        rank_d = transport_lib.put_sharded(mesh, pe_axes,
+                                           jnp.asarray(rank, wdt))
 
-    def build_level_specs(level_scales):
-        return build_specs(cfg, plan, m, n, term_bound, scales=level_scales,
-                           estimate=estimate)
+        def build_level_specs(level_scales):
+            return build_specs(cfg, plan, m, n, term_bound,
+                               scales=level_scales, estimate=estimate)
 
-    return resume_lib.run_staged(
-        succ_d, rank_d, mesh=mesh, plan=plan, cfg=cfg, m=m, n=n, seed=seed,
-        build_level_specs=build_level_specs, max_retries=max_retries,
-        supervisor=supervisor, inject=inject, stage_counters=stage_counters,
-        initial_scales=initial_scales)
+        if tr.enabled and cfg.algorithm == "srs":
+            from repro.obs import cost as cost_lib
+            lp = tuner.level_plan(cfg, p, plan.indirection.depth, n)
+            solve_span.annotate(predicted_solve_s=cost_lib.predict_solve(
+                n, plan, cfg.machine, r_total=lp[0].r_total))
+
+        succ_f, rank_f, host_stats = resume_lib.run_staged(
+            succ_d, rank_d, mesh=mesh, plan=plan, cfg=cfg, m=m, n=n,
+            seed=seed, build_level_specs=build_level_specs,
+            max_retries=max_retries, supervisor=supervisor, inject=inject,
+            stage_counters=stage_counters, initial_scales=initial_scales,
+            tracer=tracer)
+    except BaseException as e:
+        tr.end(solve_span, outcome=type(e).__name__)
+        raise
+    tr.end(solve_span, outcome="ok", attempts=host_stats["attempts"])
+    if tr.enabled:
+        from repro.obs import metrics as metrics_lib
+        metrics_lib.ingest_host_stats(tr.metrics, host_stats)
+    return succ_f, rank_f, host_stats
 
 
 def rank_list(succ, rank, mesh, **kw):

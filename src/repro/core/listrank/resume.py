@@ -66,6 +66,7 @@ from repro.core.listrank import tuner
 from repro.core.listrank.config import ListRankConfig
 from repro.core.listrank.doubling import doubling_solve
 from repro.core.listrank.srs import zero_stats, _merge
+from repro.obs import trace as trace_lib
 from repro.runtime.fault_tolerance import Preempted
 
 #: stat keys whose nonzero value means the attempt is unusable.
@@ -97,9 +98,29 @@ class SolveExhausted(RuntimeError):
             for f in tuner.FAMILY_OF.get(k, ())}))
         self.stats = dict(stats or {})
         super().__init__(
-            f"list ranking did not complete after {self.attempts} attempts; "
-            f"escalation path: {';'.join(self.scales_log)}; "
-            f"fatal stats: {self.fatal} (families: {self.families})")
+            f"list ranking did not complete after {self.attempts} attempts")
+
+    def __str__(self) -> str:
+        """Readable exhaustion report: the per-attempt escalation path
+        (each entry is a ``tuner.format_scales`` rendering, ``@Lk`` for
+        level-targeted escalations) and the fatal stats with the
+        capacity families they implicate."""
+        lines = [f"list ranking did not complete after {self.attempts} "
+                 f"attempts (capacity escalation exhausted)",
+                 "  escalation path:"]
+        for i, entry in enumerate(self.scales_log, start=1):
+            lines.append(f"    attempt {i}: {entry}")
+        lines.append("  fatal stats of the failing attempt:")
+        for key, count in sorted(self.fatal.items()):
+            if not count:
+                continue
+            fams = tuner.FAMILY_OF.get(key, ())
+            fam_s = (f" -> escalates {', '.join(fams)}" if fams
+                     else " (no capacity family)")
+            lines.append(f"    {key}={count}{fam_s}")
+        if not any(self.fatal.values()):
+            lines.append("    (none recorded)")
+        return "\n".join(lines)
 
 
 # --------------------------------------------------------------------------
@@ -447,7 +468,7 @@ def _fatal_totals(stats) -> dict:
 def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
                n: int, seed: int, build_level_specs, max_retries: int = 3,
                supervisor=None, inject=None, stage_counters: bool = False,
-               initial_scales=None):
+               initial_scales=None, tracer=None):
     """Run the staged solve to completion. Returns (succ, rank, stats).
 
     ``build_level_specs(level_scales) -> tuple[LevelSpec]`` is the
@@ -458,12 +479,19 @@ def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
     :class:`~repro.core.listrank.faults.FaultInjector`, FaultSpec, or
     sequence of FaultSpecs) drives the recovery paths deterministically;
     ``stage_counters`` records each executed stage's traced collective
-    counts in ``host_stats["stage_collectives"]``.
+    counts in ``host_stats["stage_collectives"]``; ``tracer`` (a
+    :class:`repro.obs.Tracer`) records the flight-recorder span tree —
+    one ``stage`` span per schedule slot with one nested
+    ``stage-attempt`` span per execution, each annotated with the
+    §2.6 predicted time and the stage's static collective footprint.
+    The tracer is host-side only: it never enters a jit key or a traced
+    body, so the executed programs are bit-identical with it on or off.
     """
     p = plan.p
     wdt = rank_d.dtype
     sched = schedule_for(cfg)
     n_levels = cfg.srs_rounds + 1
+    tr = trace_lib.ensure(tracer)
     injector = inject
     if injector is not None and not isinstance(injector,
                                                faults_lib.FaultInjector):
@@ -478,8 +506,44 @@ def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
     injected_log: list[str] = []
     stage_collectives: list[tuple] = []
     crashes = 0
+    if supervisor is not None:
+        supervisor.tracer = tr
 
     fp = solve_fingerprint(succ_d, rank_d, n, p, seed, cfg)
+
+    # one stage span per schedule slot stays open across its overflow
+    # retries (attempts nest under it); footprints are static per jitted
+    # runner, so they are counted once and cached by runner identity
+    # (runners are pinned alive by the _jitted_stage lru_cache).
+    stage_span, stage_span_idx, stage_attempt = None, -1, 0
+    footprint_cache: dict[int, dict] = {}
+
+    def close_stage_span(**kw):
+        nonlocal stage_span
+        if stage_span is not None:
+            tr.end(stage_span, **kw)
+            stage_span = None
+
+    def stage_prediction(runner, args):
+        """(annotations dict) — static §2.6 prediction of one stage
+        execution from its jaxpr collective footprint. Trace-only: no
+        device code runs, nothing about the solve changes."""
+        from repro.obs import cost as cost_lib
+        key = id(runner)
+        if key not in footprint_cache:
+            footprint_cache[key] = introspect.collective_footprint(
+                runner, *args)
+        fprint = footprint_cache[key]
+        pred = cost_lib.predict_stage(fprint, plan, cfg.machine,
+                                      transport_lib.is_sim(mesh))
+        count, nbytes = cost_lib.total_collectives(fprint)
+        if transport_lib.is_sim(mesh):
+            nbytes //= max(p, 1)  # marker operands carry the vPE axis
+        return {"predicted_s": pred["total_s"],
+                "predicted_startup_s": pred["startup_s"],
+                "predicted_volume_s": pred["volume_s"],
+                "collective_count": count, "payload_bytes": nbytes,
+                "footprint": cost_lib.footprint_summary(fprint)}
 
     def make_meta(idx):
         return {"format": 1, "idx": idx, "fingerprint": fp, "n": n, "p": p,
@@ -527,7 +591,19 @@ def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
             supervisor.stats["preempted"] += 1
             raise Preempted(
                 f"preempted at stage boundary {idx}/{len(sched)}")
+        if stage_span_idx != idx:
+            close_stage_span(outcome="abandoned")  # crash rewound idx
+            stage_span = tr.begin(stage.label, cat="stage",
+                                  stage=stage.kind, level=stage.level,
+                                  schedule_idx=idx)
+            stage_span_idx, stage_attempt = idx, 0
+        stage_attempt += 1
         specs = build_level_specs(level_scales)
+        att = tr.begin(f"{stage.label}#{stage_attempt}", cat="stage-attempt",
+                       stage=stage.label, level=stage.level,
+                       attempt=stage_attempt,
+                       scales=tuner.format_scales(
+                           level_scales[max(stage.level, 0)]))
         try:
             if injector is not None:
                 injector.crash_before(stage.kind, stage.level)
@@ -546,6 +622,8 @@ def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
                 cspec = injector.corrupt_after(stage.kind, stage.level)
                 if cspec is not None:
                     injected_log.append(f"corrupt:{stage.label}")
+                    tr.instant(f"corrupt:{stage.label}", cat="fault",
+                               stage=stage.label, plane=cspec.plane)
                     if stage.kind != "post":
                         out_state = out = _apply_corruption(
                             out, cspec, mesh, plan, m)
@@ -554,7 +632,11 @@ def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
             crashes += 1
             if isinstance(e, faults_lib.InjectedFault):
                 injected_log.append(f"pe_loss:{stage.label}")
+                tr.instant(f"pe_loss:{stage.label}", cat="fault",
+                           stage=stage.label)
             stage_log.append(f"{stage.label}!{type(e).__name__}")
+            tr.end(att, outcome=type(e).__name__)
+            close_stage_span(outcome="crashed")
             budget_ok = (supervisor.should_retry() if supervisor is not None
                          else crashes <= max_retries)
             if not budget_ok:
@@ -565,14 +647,19 @@ def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
             else:
                 state, idx = None, 0
                 prev_fatal = {k: 0 for k in FATAL_KEYS}
+            stage_span_idx = -1  # reopen a fresh stage span after rewind
             continue
 
+        if tr.enabled:
+            att.annotate(**stage_prediction(runner, args))
         fatal = _fatal_totals(fatal_src)
         delta = {k: fatal[k] - prev_fatal[k] for k in FATAL_KEYS}
         fam = (injector.overflow_after(stage.kind, stage.level)
                if injector is not None else None)
         if fam is not None:
             injected_log.append(f"overflow:{fam}:{stage.label}")
+            tr.instant(f"overflow:{fam}:{stage.label}", cat="fault",
+                       stage=stage.label, family=fam)
         if any(v > 0 for v in delta.values()) or fam is not None:
             # the failed attempt's output is discarded: the committed
             # boundary state (end of the previous stage) is the resume
@@ -582,9 +669,12 @@ def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
                          if any(v > 0 for v in delta.values())
                          else {FAMILY_STAT[fam]: 1})
             stage_log.append(f"{stage.label}!overflow")
+            tr.end(att, wall_s=dt, outcome="overflow",
+                   fatal={k: int(v) for k, v in esc_stats.items()})
             attempts += 1
             if attempts > max_retries + 1:
                 fail_stats = {k: int(v) for k, v in fatal.items()}
+                close_stage_span(outcome="exhausted")
                 raise SolveExhausted(attempts - 1, scales_log, esc_stats,
                                      fail_stats)
             lvl = max(stage.level, 0)
@@ -592,6 +682,8 @@ def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
                                                  esc_stats)
             entry = tuner.format_scales(level_scales[lvl])
             scales_log.append(entry + (f"@L{lvl}" if lvl > 0 else ""))
+            tr.instant(f"escalate:{stage.label}", cat="retry",
+                       stage=stage.label, scales=entry, level=lvl)
             continue
 
         # commit the boundary
@@ -600,6 +692,13 @@ def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
             stage_collectives.append((stage.label, tuple(sorted(
                 counts.items()))))
         stage_log.append(stage.label)
+        tr.end(att, wall_s=dt, outcome="committed")
+        close_stage_span()
+        if tr.enabled:
+            tr.metrics.histogram(
+                "obs/stage_wall_s",
+                "device-sync-bounded wall seconds per committed stage"
+                ).observe(dt)
         if stage.kind == "post":
             succ_f, rank_f, dev_stats = out
             break
@@ -612,6 +711,8 @@ def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
         if injector is not None and injector.preempt_after(stage.kind,
                                                            stage.level):
             injected_log.append(f"preempt:{stage.label}")
+            tr.instant(f"preempt:{stage.label}", cat="fault",
+                       stage=stage.label)
             if supervisor is not None:
                 supervisor.preempt()
             else:

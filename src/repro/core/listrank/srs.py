@@ -58,6 +58,28 @@ class LevelSpec:
     max_restarts: int
 
 
+#: schema of the solver's stat counters (repro.obs.metrics ingests
+#: host_stats under these help strings; keep in sync with zero_stats).
+STAT_HELP = {
+    "rounds": "chase rounds executed across all levels",
+    "restarts": "outer chase restarts (coverage stragglers)",
+    "chase_msgs": "chase wave messages routed",
+    "spawn_lost": "spawn proposals dropped by the spawn window",
+    "rulers": "rulers selected (final attempt, all levels)",
+    "sub_size": "recursion subproblem elements extracted",
+    "dropped": "FATAL: chase mailbox/queue overflow drops",
+    "sub_overflow": "FATAL: recursion sub-store overflow",
+    "store_miss": "FATAL: store lookups routed to a non-owner",
+    "undelivered": "FATAL: gather/reversal/fixup messages undelivered",
+    "pd_rounds": "pointer-doubling rounds (base case or pd algorithm)",
+    "pd_msgs": "pointer-doubling gather messages",
+    "reversal_msgs": "Algorithm-1 reversal preprocessing messages",
+    "fixup_msgs": "\u00a72.3 restoration fixup messages",
+    "max_queue": "peak chase queue occupancy (gauge)",
+    "attempts": "driver attempts (1 + capacity escalations)",
+}
+
+
 def zero_stats():
     z = jnp.int32(0)
     return {

@@ -188,6 +188,13 @@ def is_sim(mesh) -> bool:
     return isinstance(mesh, SimMesh)
 
 
+def backend_name(mesh) -> str:
+    """Canonical backend label of a resolved mesh object — used by the
+    observability layer (span annotations, trace metadata) and the
+    bench harness; keep in sync with ``resolve_backend``."""
+    return "simshard" if is_sim(mesh) else "mesh"
+
+
 def resolve_backend(backend: str, mesh, pe_axes: Sequence[str]):
     """Resolve a ``ListRankConfig.backend`` against the mesh object.
 

@@ -35,6 +35,7 @@ dropping the root's two dummy slots — see :func:`oracle_tour`).
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +44,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.listrank import exchange as exchange_lib
 from repro.core.listrank import transport as transport_lib
+from repro.obs import trace as trace_lib
 from repro.core.listrank.config import ListRankConfig
 from repro.core.listrank.exchange import INT_MAX, MeshPlan
 
@@ -169,7 +171,7 @@ def _jitted_builder(mesh, plan, m, child_cap, reply_cap, weighted, closed):
 
 def build_tour(parent, mesh, pe_axes=None, cfg: ListRankConfig | None = None,
                weighted: bool = False, cut_at: int | None = None,
-               max_retries: int = 2):
+               max_retries: int = 2, tracer=None):
     """Build the Euler tour of a block-sharded tree/forest on the mesh.
 
     Args:
@@ -221,12 +223,26 @@ def build_tour(parent, mesh, pe_axes=None, cfg: ListRankConfig | None = None,
     cut_d = jnp.int32(cut_at if closed else -1)
 
     cap1, cap2 = tour_caps(parent_pad, p)
-    for attempt in range(max_retries + 1):
-        builder = _jitted_builder(mesh, plan, m, cap1, cap2, weighted, closed)
-        succ, w, stats = builder(parent_d, cut_d)
-        if int(jax.device_get(stats["tour_undelivered"])) == 0:
-            return succ, w, n_pad
-        cap1, cap2 = 2 * cap1, 2 * cap2  # defensive: caps are exact
+    tr = trace_lib.ensure(tracer)
+    with tr.span("build_tour", cat="solve", n_nodes=n, p=p,
+                 backend=transport_lib.backend_name(mesh)) as tour_span:
+        for attempt in range(max_retries + 1):
+            builder = _jitted_builder(mesh, plan, m, cap1, cap2, weighted,
+                                      closed)
+            att = tr.begin(f"build_tour#{attempt + 1}", cat="stage-attempt",
+                           stage="build_tour", level=-1,
+                           attempt=attempt + 1)
+            t0 = time.time()
+            succ, w, stats = builder(parent_d, cut_d)
+            jax.block_until_ready((succ, w))
+            dt = time.time() - t0
+            if int(jax.device_get(stats["tour_undelivered"])) == 0:
+                tr.end(att, wall_s=dt, outcome="committed")
+                tour_span.annotate(attempts=attempt + 1, outcome="ok")
+                return succ, w, n_pad
+            tr.end(att, wall_s=dt, outcome="overflow")
+            cap1, cap2 = 2 * cap1, 2 * cap2  # defensive: caps are exact
+        tour_span.annotate(outcome="exhausted")
     raise RuntimeError(
         f"Euler tour construction incomplete after {max_retries + 1} "
         f"attempts; stats={jax.device_get(stats)}")

@@ -125,7 +125,8 @@ def _ranked_tour(parent, mesh, pe_axes, cfg, weighted, **kw):
     """Build the device tour, rank it, return host rank values trimmed
     to the 2n real arc slots."""
     succ, w, n_pad = euler.build_tour(parent, mesh, pe_axes=pe_axes,
-                                      cfg=cfg, weighted=weighted)
+                                      cfg=cfg, weighted=weighted,
+                                      tracer=kw.get("tracer"))
     _, rank, stats = rank_list_with_stats(succ, w, mesh, pe_axes=pe_axes,
                                           cfg=cfg, **kw)
     n = parent.shape[0]
@@ -174,7 +175,8 @@ def tree_stats(parent, mesh, pe_axes=None, cfg: ListRankConfig | None = None,
     root_of, tree_size = roots_and_sizes(parent)
 
     succ_d, wpm_d, _ = euler.build_tour(parent, mesh, pe_axes=pe_axes,
-                                        cfg=cfg, weighted=True)
+                                        cfg=cfg, weighted=True,
+                                        tracer=kw.get("tracer"))
     succ = np.asarray(jax.device_get(succ_d))[:2 * n]
     wpm = np.asarray(jax.device_get(wpm_d))[:2 * n]
     w1 = np.abs(wpm)  # unit weights: same tour, same zeroed terminals
@@ -233,7 +235,8 @@ def root_tree(parent, new_root: int, mesh, pe_axes=None,
     if new_root == int(roots[0]):
         return parent.copy()
     succ, w, _ = euler.build_tour(parent, mesh, pe_axes=pe_axes, cfg=cfg,
-                                  cut_at=int(new_root))
+                                  cut_at=int(new_root),
+                                  tracer=kw.get("tracer"))
     _, rank, _ = rank_list_with_stats(succ, w, mesh, pe_axes=pe_axes,
                                       cfg=cfg, **kw)
     r1 = np.asarray(jax.device_get(rank))[:2 * n].astype(np.int64)

@@ -1,0 +1,35 @@
+"""Observability: span tracing, metrics, and §2.6 cost accounting.
+
+The flight recorder for the solve path (DESIGN.md §12). Pass a
+:class:`Tracer` to ``rank_list_with_stats(..., tracer=...)`` (or the
+graphalg/treealg front doors) and every stage execution, retry,
+checkpoint, and capacity-estimation pre-pass is recorded as a span with
+its measured wall time, statically counted collective footprint, and
+the §2.6 predicted time; export with
+:func:`~repro.obs.export.write_chrome_trace` and
+:func:`~repro.obs.export.format_residual_table`.
+
+Instrumentation is host-side only and never perturbs a traced program —
+the no-perturbation rule is pinned by ``tests/test_obs.py``.
+"""
+from repro.obs.trace import (NULL_TRACER, NullTracer, Span, Tracer, ensure,
+                             span_tree_lines)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               Text, ingest_host_stats, json_safe,
+                               json_safe_stats)
+from repro.obs.cost import (footprint_summary, predict_footprint,
+                            predict_solve, predict_stage, total_collectives)
+from repro.obs.export import (chrome_trace, format_residual_table,
+                              residual_rows, residual_summary,
+                              write_chrome_trace)
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "Span", "ensure",
+    "span_tree_lines",
+    "Counter", "Gauge", "Histogram", "Text", "MetricsRegistry",
+    "ingest_host_stats", "json_safe", "json_safe_stats",
+    "predict_footprint", "predict_stage", "predict_solve",
+    "footprint_summary", "total_collectives",
+    "chrome_trace", "write_chrome_trace", "residual_rows",
+    "format_residual_table", "residual_summary",
+]

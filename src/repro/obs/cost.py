@@ -1,0 +1,127 @@
+"""§2.6 model-vs-measured accounting: predicted time per stage.
+
+Each traced stage carries a statically counted collective footprint
+(``introspect.collective_footprint``: jaxpr collective primitive →
+(count, payload bytes)). This module prices that footprint under the
+active :class:`~repro.core.listrank.analysis.MachineModel`, so every
+span gets a §2.6 predicted time next to its measured wall time and a
+solve can emit a predicted-vs-observed residual table.
+
+Pricing rule (the same alpha-beta decomposition as
+:func:`analysis.t_all2all` / :func:`analysis.t_hops`):
+
+- each counted ``all_to_all`` is one dense hop over its peer group.
+  With a d-hop indirection the hops interleave in the jaxpr, so a
+  single counted hop is priced at the *mean* hop size
+  ``mean_h = (1/d) * sum_h hop_size(h)``; summing the d counted hops of
+  one routing round recovers exactly the round's
+  ``t_all2all``-style startup ``alpha * sum_h hop_size(h)``
+  (= ``alpha * d * p^(1/d)`` on a balanced grid). Formally, one
+  counted hop costs ``analysis.t_all2all(mean_h, words, d=1)``.
+- tree collectives (``psum``/``all_gather``/etc. lowered as reductions)
+  are priced as a log-depth tree: ``alpha * ceil(log2 p)`` startup plus
+  ``beta * words`` volume.
+- ``words = payload_bytes / 8`` (beta is per 8-byte word). Under the
+  simshard backend, marker operands carry the virtual-PE batch axis, so
+  recorded bytes are p× the per-PE payload; callers pass
+  ``per_pe_scale = 1/p`` there (``predict_stage`` derives it from the
+  mesh).
+
+This is a *static* prediction — footprints are counted from the jaxpr,
+never measured — so it is bitwise independent of execution and adds no
+collectives of its own.
+"""
+from __future__ import annotations
+
+import math
+
+#: primitives priced as one dense hop of the indirection.
+DENSE_HOP_PRIMS = ("all_to_all",)
+
+
+def hop_sizes_of(plan) -> tuple[int, ...]:
+    """Peer-group size of each indirection hop of a ``MeshPlan``."""
+    return tuple(plan.hop_size(hop) for hop in plan.indirection.hops)
+
+
+def predict_footprint(footprint: dict, p: int,
+                      hop_sizes: tuple[int, ...],
+                      machine: analysis.MachineModel,
+                      per_pe_scale: float = 1.0) -> dict:
+    """Price a collective footprint under the alpha-beta model.
+
+    Args:
+      footprint: ``{prim: (count, payload_bytes)}`` from
+        ``introspect.collective_footprint``.
+      p: total PE count (tree-collective depth is ``ceil(log2 p)``).
+      hop_sizes: the indirection's per-hop peer-group sizes.
+      machine: the active :class:`analysis.MachineModel`.
+      per_pe_scale: multiply recorded bytes by this to get per-PE
+        payload (``1/p`` under simshard, 1 on a real mesh).
+
+    Returns:
+      ``{"total_s": float, "by_prim": {prim: seconds},
+         "startup_s": float, "volume_s": float}``.
+    """
+    d = max(len(hop_sizes), 1)
+    mean_hop = (sum(hop_sizes) / d) if hop_sizes else float(p)
+    log_p = math.ceil(math.log2(max(p, 2)))
+    by_prim: dict[str, float] = {}
+    startup = volume = 0.0
+    for prim, (count, nbytes) in sorted(footprint.items()):
+        words = nbytes * per_pe_scale / 8.0
+        if prim in DENSE_HOP_PRIMS:
+            # one counted hop == t_all2all over its peer group at d=1
+            t_s = machine.alpha * mean_hop * count
+        else:
+            t_s = machine.alpha * log_p * count
+        t_v = machine.beta * words
+        by_prim[prim] = t_s + t_v
+        startup += t_s
+        volume += t_v
+    return {"total_s": startup + volume, "by_prim": by_prim,
+            "startup_s": startup, "volume_s": volume}
+
+
+def predict_stage(footprint: dict, plan, machine: analysis.MachineModel,
+                  sim: bool) -> dict:
+    """Stage prediction from a ``MeshPlan`` (hop sizes + p) — the form
+    the resume-loop instrumentation uses. ``sim`` selects the
+    virtual-PE byte normalization (see module doc)."""
+    return predict_footprint(
+        footprint, plan.p, hop_sizes_of(plan), machine,
+        per_pe_scale=(1.0 / plan.p) if sim else 1.0)
+
+
+def predict_solve(n: int, plan, machine: analysis.MachineModel,
+                  r_total: int | None = None) -> float:
+    """Whole-solve §2.6 prediction (``analysis.t_hops`` over the plan's
+    actual hop decomposition) — annotated on the root solve span for a
+    coarse end-to-end residual alongside the per-stage ones."""
+    # lazy: repro.obs must stay importable from anywhere in the core
+    # without triggering the listrank package init (fault_tolerance ->
+    # obs -> listrank -> resume -> fault_tolerance would cycle)
+    from repro.core.listrank import analysis
+    hop_sizes = hop_sizes_of(plan)
+    machines = tuple(machine for _ in hop_sizes)
+    if r_total is None:
+        r_total = analysis.r_star(n, plan.p, max(len(hop_sizes), 1), machine)
+    return analysis.t_hops(n, plan.p, max(r_total, 1), hop_sizes, machines)
+
+
+def footprint_summary(footprint: dict) -> dict:
+    """JSON-safe ``{prim: {"count": int, "bytes": int}}`` for span args."""
+    return {prim: {"count": int(c), "bytes": int(b)}
+            for prim, (c, b) in sorted(footprint.items())}
+
+
+def total_collectives(footprint: dict) -> tuple[int, int]:
+    """(total collective count, total payload bytes) of a footprint."""
+    count = sum(int(c) for c, _ in footprint.values())
+    nbytes = sum(int(b) for _, b in footprint.values())
+    return count, nbytes
+
+
+__all__ = ["DENSE_HOP_PRIMS", "hop_sizes_of", "predict_footprint",
+           "predict_stage", "predict_solve", "footprint_summary",
+           "total_collectives"]

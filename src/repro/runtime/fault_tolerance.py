@@ -26,6 +26,7 @@ from collections import deque
 from typing import Callable
 
 from repro.checkpoint import Checkpointer
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -167,6 +168,9 @@ class SolveSupervisor:
         self._times: deque[float] = deque(maxlen=self.cfg.straggler_window)
         self.stats = {"restarts": 0, "stragglers": 0, "checkpoints": 0,
                       "preempted": 0, "resumed_from": -1}
+        #: flight-recorder hook: the solve driver installs its tracer
+        #: here so checkpoint save/restore appear in the span tree.
+        self.tracer = NULL_TRACER
 
     # ---------------------------------------------------------- signals
     def install_signal_handlers(self):
@@ -190,7 +194,9 @@ class SolveSupervisor:
         """Record a completed stage boundary; checkpoints on the
         ``ckpt_every`` cadence (or unconditionally when blocking)."""
         if blocking or idx % max(self.cfg.ckpt_every, 1) == 0:
-            self.ckpt.save(idx, state, blocking=blocking, meta=meta)
+            with self.tracer.span(f"ckpt-save@{idx}", cat="checkpoint",
+                                  idx=idx, blocking=blocking):
+                self.ckpt.save(idx, state, blocking=blocking, meta=meta)
             self.stats["checkpoints"] += 1
 
     def latest_meta(self) -> dict | None:
@@ -200,7 +206,10 @@ class SolveSupervisor:
         return self.ckpt.manifest().get("meta")
 
     def restore(self, like, shardings=None):
-        return self.ckpt.restore(None, like, shardings)
+        with self.tracer.span("ckpt-restore", cat="checkpoint") as sp:
+            out = self.ckpt.restore(None, like, shardings)
+            sp.annotate(step=out[1] if isinstance(out, tuple) else None)
+            return out
 
     # ------------------------------------------------------- accounting
     def note_stage_time(self, dt: float):

@@ -405,9 +405,58 @@ def suite_faultinject():
           and stats["attempts"] == 2)
 
 
+def suite_obs():
+    """Flight recorder on the REAL mesh backend: a traced full solve
+    must cover every scheduled stage with measured + predicted times,
+    reproduce the committed golden bytes exactly (no-perturbation), and
+    export a loadable Chrome trace. Writes the trace artifact to
+    $OBS_TRACE_OUT when set (the CI simshard-matrix job uploads it)."""
+    import json
+    from _simshard_cases import (AXES as G_AXES, SHAPE as G_SHAPE,
+                                 case_record, golden_cases, load_golden)
+    from repro import obs
+    from repro.core.listrank import resume as resume_lib
+
+    name = "list-g1-s1"
+    s, r, cfg = next((s, r, c) for nm, s, r, c in golden_cases()
+                     if nm == name)
+    mesh = compat.make_mesh(G_SHAPE, G_AXES)
+    tr = obs.Tracer(meta={"name": f"smoke-obs/{name}", "backend": "mesh"})
+    sf, rf, stats = rank_list_with_stats(s, r, mesh, cfg=cfg, tracer=tr)
+    check("mesh golden bytes identical with tracing on",
+          case_record(sf, rf, stats) == load_golden(name))
+
+    labels = [st.label for st in resume_lib.schedule_for(
+        cfg.with_(algorithm="srs"))]
+    stage_spans = list(tr.find(cat="stage"))
+    check("mesh trace covers every scheduled stage once",
+          [sp.name for sp in stage_spans] == labels)
+    (solve,) = tr.find(cat="solve")
+    check("mesh solve span", solve.args["backend"] == "mesh"
+          and solve.args["outcome"] == "ok")
+    rows = obs.residual_rows(tr)
+    print(obs.format_residual_table(rows, title=f"== {name} (mesh)"))
+    check("every stage has measured + predicted time",
+          {row["stage"] for row in rows} == set(labels)
+          and all(row["measured_s"] >= 0 for row in rows))
+
+    out = os.environ.get("OBS_TRACE_OUT", "")
+    path = out or os.path.join(os.path.dirname(__file__), "..",
+                               "benchmarks", "results",
+                               "mesh_solve_trace.json")
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    obs.write_chrome_trace(tr, path)
+    doc = json.loads(open(path).read())
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    check("chrome trace round-trips with monotone timestamps",
+          len(xs) == len(tr.spans)
+          and [e["ts"] for e in xs] == sorted(e["ts"] for e in xs))
+    print(f"wrote {path}")
+
+
 SUITES = {"exchange": suite_exchange, "listrank": suite_listrank,
           "treealg": suite_treealg, "graphalg": suite_graphalg,
-          "faultinject": suite_faultinject}
+          "faultinject": suite_faultinject, "obs": suite_obs}
 
 
 def main():

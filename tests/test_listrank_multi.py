@@ -16,7 +16,8 @@ import sys
 import pytest
 
 SUITES = ("exchange", "listrank", "treealg", "graphalg",
-          pytest.param("faultinject", marks=pytest.mark.faultinject))
+          pytest.param("faultinject", marks=pytest.mark.faultinject),
+          pytest.param("obs", marks=pytest.mark.obs))
 
 
 @pytest.mark.slow
