@@ -1,0 +1,158 @@
+"""Perf-regression gate over the benchmark headline metrics.
+
+Compares the *current* headline record — the same per-bench summary
+``run.py --summary`` appends to ``benchmarks/results/trajectory.jsonl``,
+recomputed in-memory from ``benchmarks/results/*.json`` — against a
+committed baseline record, and exits nonzero on a regression:
+
+- **structural counts** (``rows``, ``families_ok``, ``stages``) must
+  not shrink: a bench that silently covers fewer cases than the
+  baseline is a regression regardless of timing;
+- **time metrics** (``wall_s_mean``, ``measured_s``) may not exceed
+  ``baseline * (1 + tolerance)``. The default tolerance is generous
+  (1.0, i.e. 2x) because this container measures python-dispatch wall
+  time on shared CI CPUs; tighten with ``--tolerance`` or
+  ``REGRESSION_TOL`` where the runner is quiet.
+
+Baseline selection: ``--baseline FILE`` (a trajectory.jsonl or a single
+JSON record), defaulting to the **last** line of
+``benchmarks/results/trajectory.jsonl``. Comparison is per result-file
+stem, so full-mode and BENCH_QUICK artifacts gate independently
+(``graphalg`` vs ``graphalg_quick``) and one baseline record serves
+both modes. With no baseline the gate passes and says so — the first
+``run.py --summary`` creates it.
+
+CI wiring (see .github/workflows/ci.yml): the BENCH_QUICK smoke steps
+rewrite the ``*_quick.json`` artifacts, this gate compares them against
+the committed trajectory tail, then ``run.py --summary`` appends the
+fresh record so the trajectory actually accrues.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+HERE = pathlib.Path(__file__).parent
+RESULTS = HERE / "results"
+sys.path.insert(0, str(HERE))
+
+#: headline keys gated as "bigger is slower" (relative tolerance).
+TIME_KEYS = ("wall_s_mean", "measured_s")
+
+#: headline keys gated as "smaller is less coverage" (no tolerance).
+COUNT_KEYS = ("rows", "families_ok", "stages")
+
+
+def load_baseline(path: pathlib.Path) -> dict | None:
+    """Last record of a trajectory.jsonl, or a bare record JSON."""
+    if not path.exists():
+        return None
+    text = path.read_text().strip()
+    if not text:
+        return None
+    if path.suffix == ".jsonl":
+        last = None
+        for line in text.splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                last = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+        return last
+    try:
+        return json.loads(text)
+    except json.JSONDecodeError:
+        return None
+
+
+def current_record() -> dict:
+    import run as run_mod
+    return run_mod.summarize(write=False)
+
+
+def compare(baseline: dict, current: dict, tolerance: float,
+            only: set[str] | None = None) -> tuple[list[str], list[str]]:
+    """Returns (regressions, notes) comparing per-bench headlines."""
+    regressions: list[str] = []
+    notes: list[str] = []
+    base_b = baseline.get("benches", {})
+    cur_b = current.get("benches", {})
+    for stem in sorted(base_b):
+        if only is not None and stem not in only:
+            continue
+        if stem not in cur_b:
+            regressions.append(f"{stem}: result artifact disappeared "
+                               f"(was in baseline, missing now)")
+            continue
+        b, c = base_b[stem], cur_b[stem]
+        for key in COUNT_KEYS:
+            if key in b and key in c and c[key] < b[key]:
+                regressions.append(
+                    f"{stem}/{key}: {c[key]} < baseline {b[key]} "
+                    f"(coverage shrank)")
+        for key in TIME_KEYS:
+            if key not in b or key not in c:
+                continue
+            bv, cv = float(b[key]), float(c[key])
+            if bv <= 0:
+                continue
+            ratio = cv / bv
+            limit = 1.0 + tolerance
+            line = f"{stem}/{key}: {cv:.4f}s vs baseline {bv:.4f}s " \
+                   f"({ratio:.2f}x, limit {limit:.2f}x)"
+            if ratio > limit:
+                regressions.append(line)
+            else:
+                notes.append(line)
+    for stem in sorted(set(cur_b) - set(base_b)):
+        notes.append(f"{stem}: new bench (no baseline yet)")
+    return regressions, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline",
+                    default=str(RESULTS / "trajectory.jsonl"),
+                    help="trajectory.jsonl (last record) or a single "
+                         "record JSON to gate against")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("REGRESSION_TOL", "1.0")),
+                    help="allowed relative slowdown for time metrics "
+                         "(1.0 = up to 2x the baseline)")
+    ap.add_argument("--bench", action="append", default=None,
+                    help="gate only these result-file stems "
+                         "(repeatable; default: every stem in the "
+                         "baseline)")
+    ns = ap.parse_args()
+
+    baseline = load_baseline(pathlib.Path(ns.baseline))
+    if baseline is None:
+        print(f"# no baseline record at {ns.baseline} — gate passes "
+              f"vacuously; run `python benchmarks/run.py --summary` to "
+              f"create one")
+        return 0
+    current = current_record()
+    only = set(ns.bench) if ns.bench else None
+    regressions, notes = compare(baseline, current, ns.tolerance, only)
+    for line in notes:
+        print(f"  ok  {line}")
+    if regressions:
+        print(f"PERF REGRESSION GATE FAILED "
+              f"(vs {baseline.get('git_rev', '?')}, "
+              f"tolerance {ns.tolerance:g}):", file=sys.stderr)
+        for line in regressions:
+            print(f"  REGRESSION {line}", file=sys.stderr)
+        return 1
+    print(f"# regression gate OK: {len(notes)} metrics within "
+          f"tolerance {ns.tolerance:g} of baseline "
+          f"{baseline.get('git_rev', '?')}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

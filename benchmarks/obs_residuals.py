@@ -30,6 +30,7 @@ from repro.core.listrank import (ListRankConfig, instances,  # noqa: E402
 from repro.core.listrank import resume as resume_lib  # noqa: E402
 from repro.obs import (Tracer, format_residual_table,  # noqa: E402
                        residual_rows, residual_summary)
+from repro.obs import telemetry as tele_lib  # noqa: E402
 
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
 P = 8
@@ -63,6 +64,7 @@ def main():
         cfg.with_(algorithm="srs"))]
     records = []
     failures = []
+    headroom_report = []
     for fam, fam_kw in FAMILIES:
         succ, rank = make_instance(fam_kw, n)
         tr = Tracer(meta={"name": f"obs_residuals/{fam}", "family": fam})
@@ -78,12 +80,45 @@ def main():
                       and np.isfinite(r["predicted_s"]) for r in rows))
         if not ok:
             failures.append((fam, missing))
+
+        # telemetry plane: the same solve with device counters on —
+        # every scheduled stage must report finite utilization, and on
+        # a first-attempt-clean solve no observed fill may exceed its
+        # compiled cap (the headroom report's acceptance gate).
+        _, _, tstats = rank_list_with_stats(
+            succ, rank, mesh, cfg=cfg.with_(telemetry=True), seed=1)
+        tele = tstats.get("telemetry", {})
+        stages = tele.get("stages", [])
+        tele_missing = [lbl for lbl in sched_labels
+                        if lbl not in {s["label"] for s in stages}]
+        tele_finite = all(np.isfinite(s["util_max"])
+                          and np.isfinite(s["util_mean"]) for s in stages)
+        hrows = tele.get("headroom", [])
+        worst_fill = max((r["fill_max"] for r in hrows), default=0.0)
+        tele_ok = (not tele_missing and tele_finite
+                   and (tstats["attempts"] > 1 or worst_fill <= 1.0))
+        if not tele_ok:
+            failures.append((fam, {"telemetry_missing": tele_missing,
+                                   "finite": tele_finite,
+                                   "worst_fill": worst_fill}))
+        headroom_report.append(
+            f"== {fam} (n={n}, p={P}, attempts={tstats['attempts']})\n"
+            + tele_lib.format_headroom_table(hrows))
         records.append({"family": fam, "n": n, "p": P, "quick": QUICK,
                         "rows": rows, "summary": summ,
-                        "attempts": stats["attempts"], "ok": ok})
+                        "attempts": stats["attempts"], "ok": ok,
+                        "telemetry": {"stages": len(stages),
+                                      "worst_fill": worst_fill,
+                                      "headroom": hrows,
+                                      "ok": tele_ok}})
         print(f"obs/{fam},{summ['measured_s'] * 1e6:.1f},"
               f"predicted_s={summ['predicted_s']:.6f};"
-              f"stages={summ['stages']};ok={int(ok)}")
+              f"stages={summ['stages']};ok={int(ok)};"
+              f"tele_worst_fill={worst_fill:.3f};tele_ok={int(tele_ok)}")
+
+    hr_path = RESULTS / ("headroom_quick.txt" if QUICK else "headroom.txt")
+    hr_path.write_text("\n\n".join(headroom_report) + "\n")
+    print(f"# wrote {hr_path}")
 
     out = RESULTS / ("obs_residuals_quick.json" if QUICK
                      else "obs_residuals.json")
@@ -93,7 +128,7 @@ def main():
         print(f"RESIDUAL GATE FAILED: {failures}", file=sys.stderr)
         sys.exit(1)
     print(f"# residual gate OK: all {len(FAMILIES)} families produced "
-          f"complete per-stage tables")
+          f"complete per-stage tables and in-cap telemetry headroom")
 
 
 if __name__ == "__main__":

@@ -12,7 +12,11 @@ produces for every solve:
      time next to its §2.6 predicted time (alpha/beta under the active
      MachineModel, collective footprint counted statically from the
      stage jaxpr);
-  3. the metrics registry — the solver's host stats ingested into one
+  3. the capacity headroom report and measured-vs-modeled skew table —
+     the device telemetry plane (cfg.telemetry=True): observed max
+     mailbox fill vs compiled cap per stage/family/hop, and the
+     per-hop destination skew vs the uniform model;
+  4. the metrics registry — the solver's host stats ingested into one
      typed counter/gauge schema.
 
 and finally writes a Chrome-trace-event JSON (drop it on
@@ -39,11 +43,12 @@ def main():
     p, n = 8, 1 << 14
     succ, rank = instances.gen_list(n, gamma=1.0, seed=0)
     cfg = ListRankConfig(algorithm="srs", srs_rounds=2,
-                         local_contraction=True)
+                         local_contraction=True, telemetry=True)
+    mesh = sim_mesh(p)
 
     tracer = obs.Tracer(meta={"name": "trace_solve", "n": n, "p": p})
     succ_out, rank_out, stats = rank_list_with_stats(
-        succ, rank, sim_mesh(p), cfg=cfg, seed=1, tracer=tracer)
+        succ, rank, mesh, cfg=cfg, seed=1, tracer=tracer)
 
     s_ref, r_ref = rank_list_seq(succ, rank)
     assert np.array_equal(np.asarray(succ_out), s_ref)
@@ -65,6 +70,18 @@ def main():
           f"predicted {summ['predicted_s'] * 1e6:.1f}us — large ratios "
           f"are expected here: the model prices network time on the "
           f"paper's machine, the measurement is single-CPU dispatch")
+
+    tele = stats.get("telemetry", {})
+    print()
+    print(obs.format_headroom_table(tele.get("headroom", [])))
+
+    from repro.core.listrank.exchange import MeshPlan  # noqa: E402
+    from repro.obs import cost as cost_lib  # noqa: E402
+    plan = MeshPlan.from_mesh(mesh, tuple(mesh.axis_names))
+    print()
+    print(obs.format_skew_table(
+        obs.skew_rows(cost_lib.hop_sizes_of(plan), tele.get("stages", [])),
+        title="measured-vs-modeled destination skew (uniform model)"))
 
     print("\nmetrics registry:")
     for metric in sorted(tracer.metrics, key=lambda m: m.name):

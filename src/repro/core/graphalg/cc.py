@@ -52,6 +52,7 @@ from repro.core.listrank import exchange as exchange_lib
 from repro.core.listrank.config import ListRankConfig
 from repro.core.listrank.exchange import INT_MAX, MeshPlan
 from repro.core.listrank.srs import gather_until_done
+from repro.obs import telemetry as tele_lib
 
 #: graphalg's own stat keys; the ``cc_*``/``tour_*``/``stats_*`` fatal
 #: keys map to the tuner's ``graph`` capacity family (tuner.FAMILY_OF).
@@ -155,25 +156,32 @@ def _lookup_labels(f, base, m):
 
 
 def _shortcut(plan: MeshPlan, caps: GraphCaps, f, base, m, owner_of):
-    """Pointer jumping ``f = f[f]`` to a fixed point (bounded)."""
+    """Pointer jumping ``f = f[f]`` to a fixed point (bounded).
+
+    Returns ``(f, undelivered, msgs, tele)``; ``tele`` is the merged
+    per-PE routing telemetry (None unless ``plan.telemetry``)."""
     def cond(c):
-        f, changed, it, und, msgs = c
+        f, changed, it, und, msgs, _ = c
         return (changed > 0) & (it < caps.jumps)
 
     def body(c):
-        f, _, it, und, msgs = c
+        f, _, it, und, msgs, tele = c
         resp, answered, gst = gather_until_done(
             plan, f, jnp.ones(m, jnp.bool_), owner_of,
             _lookup_labels(f, base, m), caps.jump, caps.jump, dedup=True)
         nf = jnp.where(answered, resp["lab"], f)
         changed = plan.psum(jnp.sum(nf != f).astype(jnp.int32))
+        if plan.telemetry:
+            tele = tele_lib.merge(tele, gst["telemetry"])
         return nf, changed, it + 1, und + gst["undelivered"], \
-            msgs + gst["msgs"]
+            msgs + gst["msgs"], tele
 
-    f, _, _, und, msgs = lax.while_loop(
+    tele0 = (tele_lib.route_zero(plan.indirection.depth)
+             if plan.telemetry else None)
+    f, _, _, und, msgs, tele = lax.while_loop(
         cond, body, (f, jnp.int32(1), jnp.int32(0), jnp.int32(0),
-                     jnp.int32(0)))
-    return f, und, msgs
+                     jnp.int32(0), tele0))
+    return f, und, msgs, tele
 
 
 def cc_rounds(plan: MeshPlan, caps: GraphCaps, ea, eb, m: int, m_e: int,
@@ -255,12 +263,19 @@ def cc_rounds(plan: MeshPlan, caps: GraphCaps, ea, eb, m: int, m_e: int,
         fmask = fmask.at[eslot].set(True, mode="drop")
 
         # 5. shortcut to stars for the next round
-        f, jund, jmsgs = _shortcut(plan, caps, f, base, m, owner_node)
+        f, jund, jmsgs, jtele = _shortcut(plan, caps, f, base, m, owner_node)
         st = dict(st)
         st["cc_rounds"] = st["cc_rounds"] + 1
         st["cc_msgs"] = st["cc_msgs"] + plan.psum(msgs + jmsgs)
         st["cc_undelivered"] = st["cc_undelivered"] + gund + jund + \
             plan.psum(und)
+        if plan.telemetry:
+            # all four hooking legs ride graph-family caps; per-PE only.
+            round_tele = tele_lib.merge(
+                tele_lib.merge(gst["telemetry"], jtele),
+                tele_lib.merge(pst["telemetry"], cst["telemetry"]))
+            st["telemetry"] = tele_lib.merge(st["telemetry"],
+                                             {"graph": round_tele})
         return f, fmask, n_hooked, it + 1, st
 
     init = (f0, fmask0, jnp.int32(1), jnp.int32(0), stats)

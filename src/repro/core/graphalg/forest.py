@@ -132,6 +132,8 @@ def build_forest_tour(plan: MeshPlan, caps: GraphCaps, ea, eb, fmask,
     w_unit = (succ != arc_gid).astype(jnp.int32)
     stats_local = {"sent": rr_st["sent"],
                    "leftover": rr_st["leftover"] + missing}
+    if plan.telemetry:
+        stats_local["telemetry"] = rr_st["telemetry"]
     return succ, w_unit, first_mask, stats_local
 
 

@@ -50,6 +50,7 @@ from repro.core.listrank import transport as transport_lib
 from repro.core.listrank.srs import _merge, gather_until_done, zero_stats
 from repro.core.graphalg import cc as cc_lib
 from repro.core.graphalg import forest as forest_lib
+from repro.obs import telemetry as tele_lib
 from repro.obs import trace as trace_lib
 # the single int32 wire-format id headroom constant (arc ids reach
 # 2*E_pad and must stay addressable)
@@ -130,11 +131,21 @@ def _pipeline_sharded(edges, seed, *, plan: MeshPlan, cfg: ListRankConfig,
     # graph-pipeline counters plus the solver's (the two in-program
     # solves _merge into the same dict)
     stats = {**zero_stats(), **cc_lib.zero_graph_stats()}
+    if plan.telemetry:
+        stats["telemetry"] = tele_lib.stage_zero(plan.indirection.depth)
+
+    def finish(out, stats):
+        # telemetry stays per-PE (a 3rd sharded output); the remaining
+        # stats leaves are all psum'd and ride the replicated out-spec.
+        tele = stats.pop("telemetry", None)
+        if tele is not None:
+            return out, stats, jax.tree.map(lambda v: v[None], tele)
+        return out, stats
 
     # ---- 1. components + spanning-forest edge marks
     f, fmask, stats = cc_lib.cc_rounds(plan, caps, ea, eb, m, m_e, stats)
     if mode == "cc":
-        return {"components": f}, stats
+        return finish({"components": f}, stats)
 
     # ---- 2. unrooted Euler tour of the forest
     succ_t, w1, first_mask, tst = forest_lib.build_forest_tour(
@@ -142,11 +153,17 @@ def _pipeline_sharded(edges, seed, *, plan: MeshPlan, cfg: ListRankConfig,
     stats["tour_msgs"] = stats["tour_msgs"] + plan.psum(tst["sent"])
     stats["tour_undelivered"] = stats["tour_undelivered"] + plan.psum(
         tst["leftover"])
+    if plan.telemetry:
+        stats = _merge(stats, {"telemetry": {"graph": tst["telemetry"]}})
 
     # ---- 3. unit-weight ranking -> positions -> orientation
-    _, rank1, sst1 = api_lib._solve_sharded(
+    sout1 = api_lib._solve_sharded(
         succ_t, w1, seed, plan=plan, cfg=cfg, specs=specs, m=2 * m_e)
+    rank1, sst1 = sout1[1], sout1[2]
     stats = _merge(stats, sst1)
+    if plan.telemetry:
+        stats = _merge(stats, {"telemetry": jax.tree.map(
+            lambda v: v[0], sout1[3])})
     child, parent_of, r1_down, r1_up, down0 = forest_lib.orient_forest(
         rank1, ea, eb, m_e)
 
@@ -162,13 +179,20 @@ def _pipeline_sharded(edges, seed, *, plan: MeshPlan, cfg: ListRankConfig,
         miss = jnp.sum(~have & (f != gid)).astype(jnp.int32)
         stats["stats_undelivered"] = stats["stats_undelivered"] + plan.psum(
             pst["leftover"] + miss)
-        return {"components": f, "parent": parent}, stats
+        if plan.telemetry:
+            stats = _merge(stats,
+                           {"telemetry": {"graph": pst["telemetry"]}})
+        return finish({"components": f, "parent": parent}, stats)
 
     # ---- 4. ±1 depth weights over the same tour
     w2 = forest_lib.pm_weights(succ_t, arc_gid, fmask, down0)
-    _, rankpm, sst2 = api_lib._solve_sharded(
+    sout2 = api_lib._solve_sharded(
         succ_t, w2, seed + 1, plan=plan, cfg=cfg, specs=specs, m=2 * m_e)
+    rankpm, sst2 = sout2[1], sout2[2]
     stats = _merge(stats, sst2)
+    if plan.telemetry:
+        stats = _merge(stats, {"telemetry": jax.tree.map(
+            lambda v: v[0], sout2[3])})
     rpm = rankpm.reshape(m_e, 2)
     rpm_down = jnp.where(down0, rpm[:, 0], rpm[:, 1])
 
@@ -213,6 +237,11 @@ def _pipeline_sharded(edges, seed, *, plan: MeshPlan, cfg: ListRankConfig,
     stats["stats_undelivered"] = stats["stats_undelivered"] + \
         lgst["undelivered"] + plan.psum(
             lst["leftover"] + sst["leftover"] + miss)
+    if plan.telemetry:
+        finale = tele_lib.merge(tele_lib.merge(lst["telemetry"],
+                                               sst["telemetry"]),
+                                lgst["telemetry"])
+        stats = _merge(stats, {"telemetry": {"graph": finale}})
 
     # ---- closed-form per-node statistics (DESIGN.md §9)
     is_nonroot = have
@@ -225,7 +254,7 @@ def _pipeline_sharded(edges, seed, *, plan: MeshPlan, cfg: ListRankConfig,
                      jnp.maximum(L_of // 2, 0))
     out = {"components": f, "parent": parent, "depth": depth,
            "subtree_size": size, "preorder": pre, "postorder": post}
-    return out, stats
+    return finish(out, stats)
 
 
 @functools.lru_cache(maxsize=128)
@@ -233,9 +262,12 @@ def _jitted_pipeline(mesh, plan, cfg, caps, specs, m, m_e, mode):
     fn = functools.partial(_pipeline_sharded, plan=plan, cfg=cfg, caps=caps,
                            specs=specs, m=m, m_e=m_e, mode=mode)
     spec = P(plan.pe_axes)
+    out_specs = (dict.fromkeys(_OUT_KEYS[mode], spec), P())
+    if plan.telemetry:
+        out_specs = out_specs + (spec,)
     return transport_lib.device_run(
         mesh, plan.pe_axes, fn, in_specs=(spec, P()),
-        out_specs=(dict.fromkeys(_OUT_KEYS[mode], spec), P()))
+        out_specs=out_specs)
 
 
 _OUT_KEYS = {
@@ -273,7 +305,8 @@ def _prepare(edges, n_nodes, mesh, pe_axes, cfg):
     edges = _check_edges(edges, n_nodes)
     plan = MeshPlan.from_mesh(mesh, pe_axes, None,
                               wire_packing=cfg.wire_packing,
-                              pallas_pack=cfg.use_pallas_pack)
+                              pallas_pack=cfg.use_pallas_pack,
+                              telemetry=cfg.telemetry)
     p = plan.p
     n_pad = n_nodes + (-n_nodes) % p
     m = n_pad // p
@@ -359,14 +392,36 @@ def _run_pipeline(edges, n_nodes, mesh, pe_axes, cfg, mode, seed,
                 att.annotate(**_pipeline_prediction(
                     runner, edges_pad, plan, cfg, mesh))
             t0 = time.time()
-            out, stats = runner(edges_d, jnp.int32(seed))
-            jax.block_until_ready(jax.tree.leaves((out, stats)))
+            outs = runner(edges_d, jnp.int32(seed))
+            jax.block_until_ready(jax.tree.leaves(outs))
             dt = time.time() - t0
+            out, stats = outs[0], outs[1]
             host_stats = {k: int(jax.device_get(v)) for k, v in stats.items()}
             host_stats["attempts"] = attempt + 1
             fatal = sum(host_stats.get(k, 0) for k in FATAL_KEYS)
             if fatal == 0:
-                tr.end(att, wall_s=dt, outcome="committed")
+                util = {}
+                if plan.telemetry:
+                    agg = tele_lib.aggregate(jax.device_get(outs[2]))
+                    util = tele_lib.utilization(agg)
+                    spec0 = specs[0]
+                    rec = tele_lib.StageRecord(
+                        label=f"graphalg:{mode}", kind="pipeline", level=-1,
+                        caps={"chase": tuple(spec0.mail_caps),
+                              "sub": (spec0.cap_sub,),
+                              "gather": tuple(
+                                  max(a, b) for a, b in zip(
+                                      spec0.gather_req_cap,
+                                      spec0.gather_resp_cap)),
+                              "graph": (caps.tour,)},
+                        queue_cap=spec0.queue_cap, tele=agg)
+                    host_stats["telemetry"] = {
+                        "stages": [rec.to_json()],
+                        "headroom": tele_lib.headroom_rows(
+                            [rec], tuner.format_scales(scales))}
+                    tr.counter("telemetry/util_max", util["util_max"])
+                    tr.counter("telemetry/util_mean", util["util_mean"])
+                tr.end(att, wall_s=dt, outcome="committed", **util)
                 host = {k: np.asarray(jax.device_get(v))[:n_nodes]
                         for k, v in out.items()}
                 pipe_span.annotate(attempts=attempt + 1, outcome="ok")

@@ -42,6 +42,7 @@ from repro.core.listrank.srs import (LevelSpec, gather_until_done,
                                      zero_stats, _merge)
 from repro.core.listrank import resume as resume_lib
 from repro.core.listrank.resume import FATAL_KEYS, SolveExhausted  # noqa: F401
+from repro.obs import telemetry as tele_lib
 from repro.obs import trace as trace_lib
 # (re-exported: graphalg.frontdoor composes FATAL_KEYS; callers catch
 # SolveExhausted from either module.)
@@ -193,10 +194,14 @@ def _reverse_instance(plan, spec, owner_of, st, stats):
         rank_rev = rank_rev.at[idx].set(delivered["w"], mode="drop")
         return got, succ_rev, rank_rev
 
-    (got, succ_rev, rank_rev), pending, msgs = route_until_done(
+    (got, succ_rev, rank_rev), pending, msgs, rtele = route_until_done(
         plan, spec.mail_caps, payload, dest, nonterm, deliver,
         (got, succ_rev, rank_rev))
-    stats = _merge(stats, {"reversal_msgs": msgs, "undelivered": pending})
+    upd = {"reversal_msgs": msgs, "undelivered": pending}
+    if plan.telemetry:
+        # the reversal exchange rides the chase-family mail caps
+        upd["telemetry"] = {"chase": rtele}
+    stats = _merge(stats, upd)
     rev = st.replace(succ=succ_rev, rank=rank_rev)
     return rev, stats
 
@@ -256,9 +261,13 @@ def _restore_local(plan, spec, owner_of, st, aux, rep, succ_orig, rank_orig,
     final_rank = jnp.where(upd2, D + rank_orig[S] + resp2["rank"], final_rank)
     miss2 = plan.psum(jnp.sum(need & ~upd2).astype(jnp.int32))
 
-    stats = _merge(stats, {
+    upd = {
         "fixup_msgs": g1["msgs"] + g2["msgs"],
-        "undelivered": g1["undelivered"] + g2["undelivered"] + miss1 + miss2})
+        "undelivered": g1["undelivered"] + g2["undelivered"] + miss1 + miss2}
+    if plan.telemetry:
+        upd["telemetry"] = {"gather": tele_lib.merge(g1["telemetry"],
+                                                     g2["telemetry"])}
+    stats = _merge(stats, upd)
     return final_succ, final_rank, stats
 
 
@@ -270,6 +279,8 @@ def _solve_sharded(succ, rank, seed, *, plan: MeshPlan, cfg: ListRankConfig,
     gid = base + lidx
     key = jax.random.PRNGKey(seed)
     stats = zero_stats()
+    if plan.telemetry:
+        stats["telemetry"] = tele_lib.stage_zero(plan.indirection.depth)
 
     def owner_of(g):
         return g // m
@@ -291,9 +302,12 @@ def _solve_sharded(succ, rank, seed, *, plan: MeshPlan, cfg: ListRankConfig,
         st, pst = doubling_solve(plan, st, owner_of, spec0.gather_req_cap,
                                  spec0.gather_resp_cap,
                                  specs[-1].max_rounds, cfg.dedup_requests)
-        stats = _merge(stats, {"pd_rounds": pst["pd_rounds"],
-                               "pd_msgs": pst["pd_msgs"],
-                               "undelivered": pst["pd_undelivered"]})
+        upd = {"pd_rounds": pst["pd_rounds"],
+               "pd_msgs": pst["pd_msgs"],
+               "undelivered": pst["pd_undelivered"]}
+        if plan.telemetry:
+            upd["telemetry"] = {"gather": pst["telemetry"]}
+        stats = _merge(stats, upd)
     elif cfg.avoid_reversal:
         # forward chasing; the per-level direction flip at level 0 is
         # exactly the paper's §2.5 reversal-avoiding postprocess.
@@ -315,8 +329,13 @@ def _solve_sharded(succ, rank, seed, *, plan: MeshPlan, cfg: ListRankConfig,
     else:
         succ_f, rank_f = st.succ, st.rank
 
-    # make stats replicated for a P() out-spec
+    # make stats replicated for a P() out-spec; telemetry stays per-PE
+    # (popped before the psum — the count pins require the telemetry-on
+    # program to add zero collectives).
+    tele = stats.pop("telemetry", None)
     stats = {k: plan.psum(v) for k, v in stats.items()}
+    if tele is not None:
+        return succ_f, rank_f, stats, jax.tree.map(lambda v: v[None], tele)
     return succ_f, rank_f, stats
 
 
@@ -329,10 +348,13 @@ def _jitted_solver(mesh, plan, cfg, specs, m):
     fn = functools.partial(_solve_sharded, plan=plan, cfg=cfg, specs=specs,
                            m=m)
     spec_sharded = P(plan.pe_axes)
+    out_specs = (spec_sharded, spec_sharded, P())
+    if plan.telemetry:
+        out_specs = out_specs + (spec_sharded,)
     return transport_lib.device_run(
         mesh, plan.pe_axes, fn,
         in_specs=(spec_sharded, spec_sharded, P()),
-        out_specs=(spec_sharded, spec_sharded, P()))
+        out_specs=out_specs)
 
 
 def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
@@ -381,7 +403,8 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
         indirection = tuner.choose_indirection(cfg, pe_axes, axis_sizes, n)
     plan = MeshPlan.from_mesh(mesh, pe_axes, indirection,
                               wire_packing=cfg.wire_packing,
-                              pallas_pack=cfg.use_pallas_pack)
+                              pallas_pack=cfg.use_pallas_pack,
+                              telemetry=cfg.telemetry)
     p = plan.p
     if n % p != 0:
         raise ValueError(f"n={n} must be divisible by p={p} (pad the input)")
@@ -446,6 +469,14 @@ def rank_list_with_stats(succ, rank, mesh, pe_axes: Sequence[str] | None = None,
         tr.end(solve_span, outcome=type(e).__name__)
         raise
     tr.end(solve_span, outcome="ok", attempts=host_stats["attempts"])
+    if "telemetry" in host_stats and estimate is not None:
+        # back-test the sampled-splitter DKW margins against the skew
+        # the solve actually observed (EXPERIMENTS.md §telemetry).
+        recs = [tele_lib.StageRecord.from_json(d)
+                for d in host_stats["telemetry"]["stages"]]
+        host_stats["telemetry"]["dkw"] = tele_lib.dkw_backtest(
+            list(estimate.max_frac), int(estimate.sample_size),
+            [plan.hop_size(h) for h in plan.indirection.hops], recs)
     if tr.enabled:
         from repro.obs import metrics as metrics_lib
         metrics_lib.ingest_host_stats(tr.metrics, host_stats)

@@ -132,5 +132,15 @@ class ListRankConfig:
     #: exceeds VMEM).
     use_pallas_pack: bool = False
 
+    #: opt-in device-side telemetry plane (``repro.obs.telemetry``).
+    #: A *static* flag: it is part of every jitted-program cache key
+    #: (via cfg/plan), so telemetry-on programs trace and compile
+    #: separately and the telemetry-off program is byte-identical to
+    #: the committed goldens. When on, every stage emits a per-PE
+    #: telemetry pytree (mailbox fill fractions, queue high-water
+    #: marks, destination-skew summaries) as extra program outputs,
+    #: aggregated host-side — no collectives are added either way.
+    telemetry: bool = False
+
     def with_(self, **kw) -> "ListRankConfig":
         return dataclasses.replace(self, **kw)

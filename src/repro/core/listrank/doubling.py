@@ -19,6 +19,7 @@ from jax import lax
 
 from repro.core.listrank import store as store_lib
 from repro.core.listrank.exchange import MeshPlan, remote_gather
+from repro.obs import telemetry as tele_lib
 
 
 def doubling_solve(plan: MeshPlan, st: store_lib.Store,
@@ -50,10 +51,15 @@ def doubling_solve(plan: MeshPlan, st: store_lib.Store,
             "pd_msgs": stats["pd_msgs"] + gst["req_sent"] + gst["resp_sent"],
             "pd_undelivered": stats["pd_undelivered"] + gst["undelivered"],
         }
+        if plan.telemetry:
+            stats["telemetry"] = tele_lib.merge(carry[3]["telemetry"],
+                                                gst["telemetry"])
         return st2, pending, steps + 1, stats
 
     stats0 = {"pd_rounds": jnp.int32(0), "pd_msgs": jnp.int32(0),
               "pd_undelivered": jnp.int32(0)}
+    if plan.telemetry:
+        stats0["telemetry"] = tele_lib.route_zero(plan.indirection.depth)
     st, pending, steps, stats = lax.while_loop(
         cond, body, (st, jnp.int32(1), jnp.int32(0), stats0))
     stats["pd_converged"] = (pending == 0)

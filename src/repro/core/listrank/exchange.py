@@ -45,6 +45,7 @@ from jax import lax
 
 from repro.core.listrank.config import IndirectionSpec
 from repro.core.listrank import transport as transport_lib
+from repro.obs import telemetry as tele_lib
 
 Pytree = Any
 
@@ -80,6 +81,11 @@ class MeshPlan:
     wire_packing: bool = True
     pallas_pack: bool = False
     transport: transport_lib.Transport = transport_lib.MeshTransport()
+    #: mirror of ``ListRankConfig.telemetry`` (static; part of every
+    #: jitted-program key through the plan). When set, routing emits a
+    #: per-PE ``repro.obs.telemetry`` record in ``stats["telemetry"]``
+    #: — pure local arithmetic, zero added collectives.
+    telemetry: bool = False
 
     @property
     def p(self) -> int:
@@ -152,6 +158,7 @@ class MeshPlan:
                   wire_packing: bool = True,
                   pallas_pack: bool = False,
                   transport: transport_lib.Transport | None = None,
+                  telemetry: bool = False,
                   ) -> "MeshPlan":
         """Plan for a real mesh OR a :class:`transport.SimMesh` — the
         transport defaults to whichever backend the mesh object implies."""
@@ -169,7 +176,8 @@ class MeshPlan:
                          else transport_lib.MeshTransport())
         return MeshPlan(pe_axes=pe_axes, axis_sizes=sizes,
                         indirection=indirection, wire_packing=wire_packing,
-                        pallas_pack=pallas_pack, transport=transport)
+                        pallas_pack=pallas_pack, transport=transport,
+                        telemetry=telemetry)
 
 
 # --------------------------------------------------------------------------
@@ -317,17 +325,19 @@ def _bucket_indices(coord: jax.Array, valid: jax.Array, n_buckets: int,
                     cap: int):
     """Mailbox scatter coordinates for one hop.
 
-    Returns (order, row, col, fits, leftover_sorted); ``row``/``col``
-    address the ``(n_buckets, cap)`` mailbox grid in *sorted* order with
-    out-of-range sentinels for rows that don't ship this hop.
-    ``leftover_sorted`` marks valid messages beyond bucket capacity.
+    Returns (order, row, col, fits, leftover_sorted, pos); ``row``/
+    ``col`` address the ``(n_buckets, cap)`` mailbox grid in *sorted*
+    order with out-of-range sentinels for rows that don't ship this hop.
+    ``leftover_sorted`` marks valid messages beyond bucket capacity;
+    ``pos`` is the within-bucket rank (telemetry reads bucket demand
+    from it).
     """
     order, skey, pos, _ = sort_and_group(coord, valid, n_buckets)
     infit = skey < n_buckets
     fits = infit & (pos < cap)
     row = jnp.where(fits, skey, n_buckets).astype(jnp.int32)
     col = jnp.where(fits, pos, cap).astype(jnp.int32)
-    return order, row, col, fits, infit & ~fits
+    return order, row, col, fits, infit & ~fits, pos
 
 
 def _scatter_leaf(leaf_sorted: jax.Array, flat: jax.Array, n_rows: int):
@@ -374,14 +384,32 @@ def _route_impl(plan: MeshPlan, caps: Sequence[int],
         lq_dest = jnp.zeros(queue_cap, jnp.int32)
         nleft = jnp.int32(0)
     stats = {"sent": [], "leftover": jnp.int32(0)}
+    tele_hops, tele_hist = [], None
 
     for h, (hop, cap) in enumerate(zip(hops, caps)):
         s = plan.hop_size(hop)
         q = cur_valid.shape[0]
         coord = plan.hop_coord(cur["_dest"], hop)
-        order, row, col, fits, leftover_sorted = _bucket_indices(
+        order, row, col, fits, leftover_sorted, pos = _bucket_indices(
             coord, cur_valid, s, cap)
         flat = row * cap + col  # ≥ s*cap for non-shipping rows
+        if plan.telemetry:
+            # per-PE occupancy/skew sample of this hop: pure local
+            # arithmetic on indices already computed — no collectives.
+            infit = fits | leftover_sorted
+            tele_hops.append({
+                "demand_max": jnp.max(
+                    jnp.where(infit, pos + 1, 0)).astype(jnp.int32),
+                "delivered": jnp.sum(fits).astype(jnp.int32),
+                "total": jnp.sum(infit).astype(jnp.int32),
+                "cap": cap, "s": s,
+            })
+            if h == 0:
+                bins = jnp.where(cur_valid,
+                                 (coord * tele_lib.HIST_BINS) // max(s, 1),
+                                 tele_lib.HIST_BINS)
+                tele_hist = jnp.zeros(tele_lib.HIST_BINS, jnp.int32
+                                      ).at[bins].add(1, mode="drop")
         # input-aligned mailbox slot: message i ships to slot io_flat[i]
         # (out of range => stays). One index scatter replaces a sorted
         # gather per payload leaf below.
@@ -440,6 +468,8 @@ def _route_impl(plan: MeshPlan, caps: Sequence[int],
             if h < len(hops) - 1:
                 cur["_src"] = src_acc
 
+    if plan.telemetry:
+        stats["telemetry"] = tele_lib.route_wave(tele_hops, tele_hist)
     delivered = {k: cur[k] for k in user_keys}
     if track_src:
         delivered["src"] = src_acc
@@ -587,6 +617,9 @@ def request_reply(plan: MeshPlan, req_caps, resp_caps,
                                rdest.astype(jnp.int32), rvalid)
     stats = {"sent": sum(st1["sent"] + st2["sent"]).astype(jnp.int32),
              "leftover": st1["leftover"] + st2["leftover"]}
+    if plan.telemetry:
+        stats["telemetry"] = tele_lib.merge(st1["telemetry"],
+                                            st2["telemetry"])
     return rdel, rval, aux, stats
 
 
@@ -671,4 +704,7 @@ def remote_gather(plan: MeshPlan, targets: jax.Array, valid: jax.Array,
         "resp_sent": sum(st_resp["sent"]),
         "undelivered": req_left + resp_left,
     }
+    if plan.telemetry:
+        stats["telemetry"] = tele_lib.merge(st_req["telemetry"],
+                                            st_resp["telemetry"])
     return out, answered, stats

@@ -66,6 +66,7 @@ from repro.core.listrank import tuner
 from repro.core.listrank.config import ListRankConfig
 from repro.core.listrank.doubling import doubling_solve
 from repro.core.listrank.srs import zero_stats, _merge
+from repro.obs import telemetry as tele_lib
 from repro.obs import trace as trace_lib
 from repro.runtime.fault_tolerance import Preempted
 
@@ -182,6 +183,28 @@ def _stats_in(stats):
     return {k: jnp.reshape(v, ()) for k, v in stats.items()}
 
 
+def _tele_seed(stats, plan):
+    """Seed the per-stage device telemetry record (cfg.telemetry): a
+    fresh ``stage_zero`` per stage so telemetry is attributed per stage
+    instead of accumulating through the boundary state. The record is
+    popped again by :func:`_tele_pop` before the stats re-enter the
+    committed boundary (``boundary_template`` is unchanged — telemetry
+    never reaches a checkpoint)."""
+    if plan.telemetry:
+        stats["telemetry"] = tele_lib.stage_zero(plan.indirection.depth)
+    return stats
+
+
+def _tele_pop(stats, plan):
+    """Split a stage's stats into (plain stats, per-PE telemetry-out).
+    The telemetry leaves gain a leading (1,)-per-PE axis so the same
+    block sharding as the stats applies."""
+    if not plan.telemetry:
+        return stats, None
+    tele = stats.pop("telemetry")
+    return stats, jax.tree.map(lambda v: v[None], tele)
+
+
 def _prep_body(succ, rank, *, plan, cfg, spec0, m):
     """Everything before the recursion: contraction, store build, and
     (faithful Algorithm 1 only) the reversal preprocessing."""
@@ -189,7 +212,7 @@ def _prep_body(succ, rank, *, plan, cfg, spec0, m):
     pe = plan.my_id().astype(jnp.int32)
     base = pe * m
     gid = base + jnp.arange(m, dtype=jnp.int32)
-    stats = zero_stats()
+    stats = _tele_seed(zero_stats(), plan)
     owner_of = _owner_fn(m)
 
     if cfg.local_contraction:
@@ -221,14 +244,17 @@ def _prep_body(succ, rank, *, plan, cfg, spec0, m):
     if cfg.local_contraction:
         state["rep"] = rep
         state["aux"] = aux
+    stats, tele = _tele_pop(stats, plan)
     state["stats"] = _stats_out(stats)
+    if tele is not None:
+        state["_telemetry"] = tele
     return state
 
 
 def _descend_body(state, seed, *, plan, cfg, spec, level, m):
     owner_of = _owner_fn(m)
     key = jax.random.PRNGKey(seed)
-    stats = _stats_in(state["stats"])
+    stats = _tele_seed(_stats_in(state["stats"]), plan)
     st = state["stores"][-1]
     forced = state.get("forced") if level == 0 else None
     st, sub, take, is_sub, is_term, stats = srs_lib.descend_level(
@@ -238,22 +264,28 @@ def _descend_body(state, seed, *, plan, cfg, spec, level, m):
     out["takes"] = state["takes"] + (take,)
     out["is_subs"] = state["is_subs"] + (is_sub,)
     out["is_terms"] = state["is_terms"] + (is_term,)
+    stats, tele = _tele_pop(stats, plan)
     out["stats"] = _stats_out(stats)
+    if tele is not None:
+        out["_telemetry"] = tele
     return out
 
 
 def _base_body(state, *, plan, cfg, spec, m):
-    stats = _stats_in(state["stats"])
+    stats = _tele_seed(_stats_in(state["stats"]), plan)
     st, stats = srs_lib.base_level(plan, cfg, spec, _owner_fn(m),
                                    state["stores"][-1], stats)
     out = dict(state)
     out["stores"] = state["stores"][:-1] + (st,)
+    stats, tele = _tele_pop(stats, plan)
     out["stats"] = _stats_out(stats)
+    if tele is not None:
+        out["_telemetry"] = tele
     return out
 
 
 def _ascend_body(state, *, plan, cfg, spec, level, m, want_sink):
-    stats = _stats_in(state["stats"])
+    stats = _tele_seed(_stats_in(state["stats"]), plan)
     st, sub = state["stores"][-2], state["stores"][-1]
     st, stats = srs_lib.ascend_level(
         plan, cfg, spec, _owner_fn(m), st, sub,
@@ -264,21 +296,31 @@ def _ascend_body(state, *, plan, cfg, spec, level, m, want_sink):
     out["takes"] = state["takes"][:-1]
     out["is_subs"] = state["is_subs"][:-1]
     out["is_terms"] = state["is_terms"][:-1]
+    stats, tele = _tele_pop(stats, plan)
     out["stats"] = _stats_out(stats)
+    if tele is not None:
+        out["_telemetry"] = tele
     return out
 
 
 def _pd_body(state, *, plan, cfg, spec0, spec_base, m):
-    stats = _stats_in(state["stats"])
+    stats = _tele_seed(_stats_in(state["stats"]), plan)
     st, pst = doubling_solve(plan, state["stores"][-1], _owner_fn(m),
                              spec0.gather_req_cap, spec0.gather_resp_cap,
                              spec_base.max_rounds, cfg.dedup_requests)
-    stats = _merge(stats, {"pd_rounds": pst["pd_rounds"],
-                           "pd_msgs": pst["pd_msgs"],
-                           "undelivered": pst["pd_undelivered"]})
+    upd = {"pd_rounds": pst["pd_rounds"],
+           "pd_msgs": pst["pd_msgs"],
+           "undelivered": pst["pd_undelivered"]}
+    if plan.telemetry:
+        # PD requests ride the gather-family mailboxes (req/resp caps).
+        upd["telemetry"] = {"gather": pst["telemetry"]}
+    stats = _merge(stats, upd)
     out = dict(state)
     out["stores"] = state["stores"][:-1] + (st,)
+    stats, tele = _tele_pop(stats, plan)
     out["stats"] = _stats_out(stats)
+    if tele is not None:
+        out["_telemetry"] = tele
     return out
 
 
@@ -288,7 +330,7 @@ def _post_body(state, succ, rank, *, plan, cfg, spec0, m):
     from repro.core.listrank import api as api_lib
     pe = plan.my_id().astype(jnp.int32)
     base = pe * m
-    stats = _stats_in(state["stats"])
+    stats = _tele_seed(_stats_in(state["stats"]), plan)
     st = state["stores"][0]
     if cfg.local_contraction:
         succ_f, rank_f, stats = api_lib._restore_local(
@@ -296,7 +338,13 @@ def _post_body(state, succ, rank, *, plan, cfg, spec0, m):
             succ, rank, base, stats)
     else:
         succ_f, rank_f = st.succ, st.rank
+    # telemetry leaves stay per-PE: the one stat psum below must not
+    # grow any collectives when telemetry is on (pinned by the
+    # transport-audit count tests), so pop before reducing.
+    stats, tele = _tele_pop(stats, plan)
     stats = {k: plan.psum(v) for k, v in stats.items()}
+    if tele is not None:
+        return succ_f, rank_f, stats, tele
     return succ_f, rank_f, stats
 
 
@@ -333,7 +381,10 @@ def _jitted_stage(mesh, plan, cfg, stage: Stage, key_specs, m):
     elif stage.kind == "post":
         fn = functools.partial(_post_body, plan=plan, cfg=cfg,
                                spec0=key_specs[0], m=m)
-        in_specs, out_specs = (sh, sh, sh), (sh, sh, rep)
+        in_specs = (sh, sh, sh)
+        # telemetry-on: the per-PE telemetry record is a 4th output
+        # (prefix spec sh covers the whole subtree).
+        out_specs = (sh, sh, rep, sh) if plan.telemetry else (sh, sh, rep)
     else:
         raise ValueError(f"unknown stage kind {stage.kind!r}")
     return transport_lib.device_run(mesh, plan.pe_axes, fn,
@@ -505,6 +556,7 @@ def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
     stage_log: list[str] = []
     injected_log: list[str] = []
     stage_collectives: list[tuple] = []
+    tele_records: list[tele_lib.StageRecord] = []
     crashes = 0
     if supervisor is not None:
         supervisor.tracer = tr
@@ -692,15 +744,43 @@ def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
             stage_collectives.append((stage.label, tuple(sorted(
                 counts.items()))))
         stage_log.append(stage.label)
-        tr.end(att, wall_s=dt, outcome="committed")
+        util = {}
+        if plan.telemetry:
+            # harvest the stage's per-PE telemetry record before the
+            # state is committed/checkpointed (boundary_template does
+            # not — and must not — carry it).
+            tele_pe = (out[3] if stage.kind == "post"
+                       else out_state.pop("_telemetry"))
+            agg = tele_lib.aggregate(jax.device_get(tele_pe))
+            util = tele_lib.utilization(agg)
+            spec_u = _stage_specs(stage, specs)[0]
+            tele_records.append(tele_lib.StageRecord(
+                label=stage.label, kind=stage.kind, level=stage.level,
+                caps={"chase": tuple(spec_u.mail_caps),
+                      "sub": (spec_u.cap_sub,),
+                      "gather": tuple(
+                          max(a, b) for a, b in zip(
+                              spec_u.gather_req_cap,
+                              spec_u.gather_resp_cap))},
+                queue_cap=spec_u.queue_cap, tele=agg))
+            tr.counter("telemetry/util_max", util["util_max"])
+            tr.counter("telemetry/util_mean", util["util_mean"])
+            tr.counter("telemetry/queue_hwm",
+                       float(agg.get("queue_hwm", 0)))
+        tr.end(att, wall_s=dt, outcome="committed", **util)
         close_stage_span()
         if tr.enabled:
             tr.metrics.histogram(
                 "obs/stage_wall_s",
                 "device-sync-bounded wall seconds per committed stage"
                 ).observe(dt)
+            if plan.telemetry:
+                tr.metrics.histogram(
+                    "telemetry/stage_util_max",
+                    tele_lib.TELEMETRY_HELP["util_max"]
+                    ).observe(util["util_max"])
         if stage.kind == "post":
-            succ_f, rank_f, dev_stats = out
+            succ_f, rank_f, dev_stats = out[0], out[1], out[2]
             break
         state = out_state
         prev_fatal = fatal
@@ -732,6 +812,12 @@ def run_staged(succ_d, rank_d, *, mesh, plan, cfg: ListRankConfig, m: int,
     host_stats["recovery"] = rec
     if stage_counters:
         host_stats["stage_collectives"] = tuple(stage_collectives)
+    if plan.telemetry:
+        host_stats["telemetry"] = {
+            "stages": [r.to_json() for r in tele_records],
+            "headroom": tele_lib.headroom_rows(tele_records,
+                                               scales_log[-1]),
+        }
     if supervisor is not None:
         supervisor.ckpt.wait()
     return succ_f, rank_f, host_stats

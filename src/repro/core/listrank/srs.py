@@ -34,6 +34,7 @@ from repro.core.listrank.config import ListRankConfig
 from repro.core.listrank.doubling import allgather_solve, doubling_solve
 from repro.core.listrank.exchange import (MeshPlan, compact_queue,
                                           remote_gather, route_compact)
+from repro.obs import telemetry as tele_lib
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -93,7 +94,11 @@ def zero_stats():
 def _merge(a, b):
     out = dict(a)
     for k, v in b.items():
-        if k == "max_queue":
+        if k == "telemetry":
+            # device-side telemetry pytree (cfg.telemetry): HWM leaves
+            # max-merge, counters add — see repro.obs.telemetry.merge.
+            out[k] = tele_lib.merge(a.get(k), v)
+        elif k == "max_queue":
             out[k] = jnp.maximum(a[k], v)
         else:
             out[k] = a[k] + v
@@ -110,45 +115,62 @@ def gather_until_done(plan: MeshPlan, targets, valid, owner_of, lookup_fn,
     results = {k: jnp.zeros(s.shape, s.dtype) for k, s in shapes.items()}
 
     def cond(c):
-        _, _, remaining_n, it, _ = c
+        _, _, remaining_n, it, _, _ = c
         return (remaining_n > 0) & (it < max_iters)
 
     def body(c):
-        results, remaining, _, it, msgs = c
+        results, remaining, _, it, msgs, tele = c
         resp, answered, st = remote_gather(plan, targets, remaining, owner_of,
                                            lookup_fn, req_cap, resp_cap, dedup)
         results = {k: jnp.where(answered, resp[k], v) for k, v in results.items()}
         remaining = remaining & ~answered
         rn = plan.psum(jnp.sum(remaining).astype(jnp.int32))
-        return results, remaining, rn, it + 1, msgs + st["req_sent"] + st["resp_sent"]
+        if plan.telemetry:
+            tele = tele_lib.merge(tele, st["telemetry"])
+        return (results, remaining, rn, it + 1,
+                msgs + st["req_sent"] + st["resp_sent"], tele)
 
-    init = (results, valid, jnp.int32(1), jnp.int32(0), jnp.int32(0))
-    results, remaining, rn, _, msgs = lax.while_loop(cond, body, init)
-    return results, ~remaining & valid, {"undelivered": rn, "msgs": msgs}
+    tele0 = (tele_lib.route_zero(plan.indirection.depth)
+             if plan.telemetry else None)
+    init = (results, valid, jnp.int32(1), jnp.int32(0), jnp.int32(0), tele0)
+    results, remaining, rn, _, msgs, tele = lax.while_loop(cond, body, init)
+    out_stats = {"undelivered": rn, "msgs": msgs}
+    if plan.telemetry:
+        out_stats["telemetry"] = tele
+    return results, ~remaining & valid, out_stats
 
 
 def route_until_done(plan: MeshPlan, caps, payload, dest, valid,
                      deliver_fn, carry, max_iters=64):
     """Route messages, applying deliver_fn(carry, delivered, dvalid) each
     round, re-queuing leftovers until everything is delivered. Leftover
-    compaction is fused into the routing sort (route_compact)."""
+    compaction is fused into the routing sort (route_compact).
+
+    Returns ``(carry, pending, msgs, tele)`` — ``tele`` is the merged
+    per-PE routing telemetry (None unless ``plan.telemetry``)."""
     q = dest.shape[0]
 
     def cond(c):
         return (c[4] > 0) & (c[5] < max_iters)
 
     def body(c):
-        carry, payload, dest, valid, _, it, msgs = c
+        carry, payload, dest, valid, _, it, msgs, tele = c
         delivered, dval, (npl, nd, nv), dropped, st = route_compact(
             plan, caps, [(payload, dest, valid)], q)
         carry = deliver_fn(carry, delivered, dval)
         pending = plan.psum(jnp.sum(nv).astype(jnp.int32) + dropped)
-        return carry, npl, nd, nv, pending, it + 1, msgs + sum(st["sent"])
+        if plan.telemetry:
+            tele = tele_lib.merge(tele, st["telemetry"])
+        return (carry, npl, nd, nv, pending, it + 1, msgs + sum(st["sent"]),
+                tele)
 
+    tele0 = (tele_lib.route_zero(plan.indirection.depth)
+             if plan.telemetry else None)
     pend0 = plan.psum(jnp.sum(valid).astype(jnp.int32))
-    init = (carry, payload, dest, valid, pend0, jnp.int32(0), jnp.int32(0))
-    carry, _, _, _, pending, _, msgs = lax.while_loop(cond, body, init)
-    return carry, pending, msgs
+    init = (carry, payload, dest, valid, pend0, jnp.int32(0), jnp.int32(0),
+            tele0)
+    carry, _, _, _, pending, _, msgs, tele = lax.while_loop(cond, body, init)
+    return carry, pending, msgs, tele
 
 
 # --------------------------------------------------------------------------
@@ -272,14 +294,18 @@ def _chase(plan: MeshPlan, spec: LevelSpec, owner_of, st, visited, is_ruler,
             qcount = (jnp.sum(queue2[2]) + jnp.sum(fwd2[2])
                       + jnp.sum(spawn2[2])).astype(jnp.int32)
             pending = plan.psum(qcount + dropped)
-            stats = _merge(stats, {
+            upd = {
                 "rounds": jnp.int32(1),
                 "chase_msgs": sum(rst["sent"]).astype(jnp.int32),
                 "spawn_lost": lost,
                 "dropped": dropped,
                 "store_miss": jnp.sum(dval & ~found).astype(jnp.int32),
                 "max_queue": qcount,
-            })
+            }
+            if plan.telemetry:
+                upd["telemetry"] = {"chase": rst["telemetry"],
+                                    "queue_hwm": qcount}
+            stats = _merge(stats, upd)
             return (st, visited, is_ruler, is_sub, perm_pos,
                     (queue2, fwd2, spawn2), stats, pending, rounds_done + 1)
 
@@ -369,7 +395,7 @@ def flip_direction(plan: MeshPlan, spec: LevelSpec, owner_of, st, is_term0,
         return term_of, total_of, have
 
     mail = tuple(max(c, 8) for c in spec.mail_caps)
-    (term_of, total_of, have), pending, msgs = route_until_done(
+    (term_of, total_of, have), pending, msgs, rtele = route_until_done(
         plan, mail, payload, dest, is_term0, deliver,
         (term_of, total_of, have))
 
@@ -387,10 +413,15 @@ def flip_direction(plan: MeshPlan, spec: LevelSpec, owner_of, st, is_term0,
     upd = answered & resp["found"]
     out = st.replace(succ=jnp.where(upd, resp["term"], st.succ),
                      rank=jnp.where(upd, resp["total"] - st.rank, st.rank))
-    stats = _merge(stats, {
+    fix = {
         "fixup_msgs": msgs + gst["msgs"],
         "undelivered": pending + gst["undelivered"] +
-        plan.psum(jnp.sum(st.valid & ~upd).astype(jnp.int32))})
+        plan.psum(jnp.sum(st.valid & ~upd).astype(jnp.int32))}
+    if plan.telemetry:
+        # the terminal-report leg rides the chase-family mail caps; the
+        # initial lookup rides the gather caps.
+        fix["telemetry"] = {"chase": rtele, "gather": gst["telemetry"]}
+    stats = _merge(stats, fix)
     return out, stats
 
 
@@ -426,9 +457,11 @@ def base_level(plan: MeshPlan, cfg: ListRankConfig, spec: LevelSpec,
         st, pst = doubling_solve(plan, st, owner_of, spec.gather_req_cap,
                                  spec.gather_resp_cap, spec.max_rounds,
                                  dedup=cfg.dedup_requests)
-    stats = _merge(stats, {"pd_rounds": pst["pd_rounds"],
-                           "pd_msgs": pst["pd_msgs"],
-                           "undelivered": pst["pd_undelivered"]})
+    upd = {"pd_rounds": pst["pd_rounds"], "pd_msgs": pst["pd_msgs"],
+           "undelivered": pst["pd_undelivered"]}
+    if plan.telemetry and "telemetry" in pst:
+        upd["telemetry"] = {"gather": pst["telemetry"]}
+    stats = _merge(stats, upd)
     return st, stats
 
 
@@ -467,8 +500,14 @@ def descend_level(plan: MeshPlan, cfg: ListRankConfig, spec: LevelSpec,
                                is_sub, forced, perm, r_target, stats)
 
     sub, take, overflow = _extract_sub(st, is_sub, spec.cap_sub)
-    stats = _merge(stats, {"sub_overflow": overflow,
-                           "sub_size": jnp.sum(sub.valid).astype(jnp.int32)})
+    n_sub = jnp.sum(sub.valid).astype(jnp.int32)
+    upd = {"sub_overflow": overflow, "sub_size": n_sub}
+    if plan.telemetry:
+        # sub-store occupancy as a fill record: demand (incl. overflow)
+        # over the compiled cap_sub — >1 explains a sub escalation.
+        upd["telemetry"] = {"sub": tele_lib.store_fill(
+            plan.indirection.depth, n_sub + overflow, spec.cap_sub)}
+    stats = _merge(stats, upd)
     return st, sub, take, is_sub, is_term, stats
 
 
@@ -493,10 +532,13 @@ def ascend_level(plan: MeshPlan, cfg: ListRankConfig, spec: LevelSpec,
     upd = answered & resp["found"]
     st = st.replace(succ=jnp.where(upd, resp["succ"], st.succ),
                     rank=jnp.where(upd, st.rank + resp["rank"], st.rank))
-    stats = _merge(stats, {
+    prop = {
         "undelivered": gst["undelivered"] +
         plan.psum(jnp.sum(non_sub & ~upd).astype(jnp.int32)),
-        "fixup_msgs": gst["msgs"]})
+        "fixup_msgs": gst["msgs"]}
+    if plan.telemetry:
+        prop["telemetry"] = {"gather": gst["telemetry"]}
+    stats = _merge(stats, prop)
 
     if want_sink:
         st, stats = flip_direction(plan, spec, owner_of, st, is_term, stats)

@@ -44,6 +44,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.listrank import exchange as exchange_lib
 from repro.core.listrank import transport as transport_lib
+from repro.obs import telemetry as tele_lib
 from repro.obs import trace as trace_lib
 from repro.core.listrank.config import ListRankConfig
 from repro.core.listrank.exchange import INT_MAX, MeshPlan
@@ -155,6 +156,12 @@ def _build_sharded(parent, cut, *, plan: MeshPlan, m: int, child_cap: int,
     missing = jnp.sum(nonroot & ~have).astype(jnp.int32)
     stats = {"tour_undelivered": plan.psum(missing + rr_st["leftover"]),
              "tour_msgs": plan.psum(rr_st["sent"])}
+    if plan.telemetry:
+        # per-PE tour-round telemetry (graph family), as a 4th sharded
+        # output — never psum'd (zero added collectives).
+        tele = tele_lib.merge(tele_lib.stage_zero(plan.indirection.depth),
+                              {"graph": rr_st["telemetry"]})
+        return succ, w, stats, jax.tree.map(lambda v: v[None], tele)
     return succ, w, stats
 
 
@@ -164,9 +171,11 @@ def _jitted_builder(mesh, plan, m, child_cap, reply_cap, weighted, closed):
                            child_cap=child_cap, reply_cap=reply_cap,
                            weighted=weighted, closed=closed)
     spec = P(plan.pe_axes)
+    out_specs = ((spec, spec, P(), spec) if plan.telemetry
+                 else (spec, spec, P()))
     return transport_lib.device_run(mesh, plan.pe_axes, fn,
                                     in_specs=(spec, P()),
-                                    out_specs=(spec, spec, P()))
+                                    out_specs=out_specs)
 
 
 def build_tour(parent, mesh, pe_axes=None, cfg: ListRankConfig | None = None,
@@ -212,7 +221,8 @@ def build_tour(parent, mesh, pe_axes=None, cfg: ListRankConfig | None = None,
             closed = False  # already rooted there; the default cut is it
     plan = MeshPlan.from_mesh(mesh, pe_axes, None,
                               wire_packing=cfg.wire_packing,
-                              pallas_pack=cfg.use_pallas_pack)
+                              pallas_pack=cfg.use_pallas_pack,
+                              telemetry=cfg.telemetry)
     p = plan.p
     pad = (-n) % p
     parent_pad = np.concatenate([parent_np, np.arange(n, n + pad)])
@@ -233,11 +243,21 @@ def build_tour(parent, mesh, pe_axes=None, cfg: ListRankConfig | None = None,
                            stage="build_tour", level=-1,
                            attempt=attempt + 1)
             t0 = time.time()
-            succ, w, stats = builder(parent_d, cut_d)
+            out = builder(parent_d, cut_d)
+            succ, w, stats = out[0], out[1], out[2]
             jax.block_until_ready((succ, w))
             dt = time.time() - t0
             if int(jax.device_get(stats["tour_undelivered"])) == 0:
-                tr.end(att, wall_s=dt, outcome="committed")
+                util = {}
+                if plan.telemetry:
+                    agg = tele_lib.aggregate(jax.device_get(out[3]))
+                    util = tele_lib.utilization(agg)
+                    tour_span.annotate(
+                        telemetry=tele_lib.StageRecord(
+                            label="build_tour", kind="tour", level=-1,
+                            caps={"graph": (cap1, cap2)}, queue_cap=0,
+                            tele=agg).to_json())
+                tr.end(att, wall_s=dt, outcome="committed", **util)
                 tour_span.annotate(attempts=attempt + 1, outcome="ok")
                 return succ, w, n_pad
             tr.end(att, wall_s=dt, outcome="overflow")

@@ -17,11 +17,15 @@ from repro.obs.trace import (NULL_TRACER, NullTracer, Span, Tracer, ensure,
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                Text, ingest_host_stats, json_safe,
                                json_safe_stats)
-from repro.obs.cost import (footprint_summary, predict_footprint,
-                            predict_solve, predict_stage, total_collectives)
+from repro.obs.cost import (footprint_summary, format_skew_table,
+                            predict_footprint, predict_solve, predict_stage,
+                            skew_rows, total_collectives)
 from repro.obs.export import (chrome_trace, format_residual_table,
                               residual_rows, residual_summary,
                               write_chrome_trace)
+from repro.obs.telemetry import (StageRecord, TELEMETRY_HELP, dkw_backtest,
+                                 format_headroom_table, headroom_rows,
+                                 utilization)
 
 __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER", "Span", "ensure",
@@ -30,6 +34,9 @@ __all__ = [
     "ingest_host_stats", "json_safe", "json_safe_stats",
     "predict_footprint", "predict_stage", "predict_solve",
     "footprint_summary", "total_collectives",
+    "skew_rows", "format_skew_table",
     "chrome_trace", "write_chrome_trace", "residual_rows",
     "format_residual_table", "residual_summary",
+    "StageRecord", "TELEMETRY_HELP", "dkw_backtest",
+    "format_headroom_table", "headroom_rows", "utilization",
 ]

@@ -109,6 +109,62 @@ def predict_solve(n: int, plan, machine: analysis.MachineModel,
     return analysis.t_hops(n, plan.p, max(r_total, 1), hop_sizes, machines)
 
 
+# --------------------------------------------------------------------------
+# measured-vs-modeled destination skew (telemetry plane)
+# --------------------------------------------------------------------------
+
+def skew_rows(hop_sizes, stage_records) -> list[dict]:
+    """Measured-vs-modeled per-hop destination skew.
+
+    The §2 capacity derivation models destinations as uniform: the
+    hottest bucket of a hop with peer-group size ``s`` carries a
+    ``1/s`` traffic fraction in expectation. The telemetry plane
+    measures the worst ``dest_frac_max`` each hop actually saw — the
+    ratio is the skew factor the capacity slack has to absorb, the
+    residual-table counterpart for *capacities* instead of seconds.
+
+    ``stage_records`` accepts both :class:`~repro.obs.telemetry.
+    StageRecord` objects and their ``to_json`` dicts (the
+    ``host_stats["telemetry"]["stages"]`` form).
+    """
+    from repro.obs import telemetry as tele_lib
+    observed: dict[int, float] = {}
+    for rec in stage_records:
+        tele = rec.get("tele", {}) if isinstance(rec, dict) else rec.tele
+        for fam in tele_lib.STAGE_FAMILIES:
+            t = tele.get(fam)
+            if not t or not int(t.get("rounds", 0)):
+                continue
+            for hop, frac in enumerate(t.get("dest_frac_max", [])):
+                observed[hop] = max(observed.get(hop, 0.0), float(frac))
+    rows = []
+    for hop, s in enumerate(hop_sizes):
+        modeled = 1.0 / max(int(s), 1)
+        obs = observed.get(hop, 0.0)
+        rows.append({"hop": hop, "hop_size": int(s),
+                     "modeled_frac": modeled, "observed_frac": obs,
+                     "skew": obs / modeled})
+    return rows
+
+
+def format_skew_table(rows, title: str | None = None) -> str:
+    """Aligned text rendering of the per-hop skew rows."""
+    header = ("hop", "size", "modeled", "observed", "skew")
+    body = [(str(r["hop"]), str(r["hop_size"]),
+             f"{r['modeled_frac']:.4f}", f"{r['observed_frac']:.4f}",
+             f"{r['skew']:.2f}x") for r in rows]
+    widths = [max(len(header[i]), *(len(b[i]) for b in body))
+              if body else len(header[i]) for i in range(len(header))]
+    lines = [] if title is None else [title]
+    lines.append("  ".join(h.rjust(w) for h, w in zip(header, widths)))
+    lines.append("  ".join("-" * w for w in widths))
+    lines += ["  ".join(c.rjust(w) for c, w in zip(row, widths))
+              for row in body]
+    if not body:
+        lines.append("(no telemetry recorded)")
+    return "\n".join(lines)
+
+
 def footprint_summary(footprint: dict) -> dict:
     """JSON-safe ``{prim: {"count": int, "bytes": int}}`` for span args."""
     return {prim: {"count": int(c), "bytes": int(b)}
@@ -124,4 +180,4 @@ def total_collectives(footprint: dict) -> tuple[int, int]:
 
 __all__ = ["DENSE_HOP_PRIMS", "hop_sizes_of", "predict_footprint",
            "predict_stage", "predict_solve", "footprint_summary",
-           "total_collectives"]
+           "total_collectives", "skew_rows", "format_skew_table"]

@@ -29,18 +29,25 @@ _US = 1e6
 
 
 def chrome_trace(tracer, pid: int = 0) -> dict:
-    """The trace as a Chrome trace-event dict (``json.dump``-ready)."""
+    """The trace as a Chrome trace-event dict (``json.dump``-ready).
+
+    Tolerates a :class:`~repro.obs.trace.NullTracer` (or any tracer
+    missing attributes): the result is a minimal but valid trace —
+    exporters must never take down a solve."""
+    meta = getattr(tracer, "meta", None) or {}
+    spans = getattr(tracer, "spans", ()) or ()
+    instants = getattr(tracer, "instants", ()) or ()
     events = [{
         "ph": "M", "name": "process_name", "pid": pid, "tid": 0,
-        "args": {"name": tracer.meta.get("name", "repro-solve")},
+        "args": {"name": meta.get("name", "repro-solve")},
     }]
-    if tracer.meta:
+    if meta:
         events.append({"ph": "M", "name": "process_labels", "pid": pid,
                        "tid": 0,
-                       "args": {"labels": json.dumps(json_safe(tracer.meta))}})
-    end_fallback = max((s.t1 for s in tracer.spans if s.t1 is not None),
+                       "args": {"labels": json.dumps(json_safe(meta))}})
+    end_fallback = max((s.t1 for s in spans if s.t1 is not None),
                        default=0.0)
-    for s in tracer.spans:
+    for s in spans:
         t1 = s.t1 if s.t1 is not None else end_fallback
         events.append({
             "ph": "X", "name": s.name, "cat": s.cat, "pid": pid,
@@ -49,16 +56,27 @@ def chrome_trace(tracer, pid: int = 0) -> dict:
             "dur": round(max(t1 - s.t0, 0.0) * _US, 3),
             "args": json_safe(s.args),
         })
-    for s in tracer.instants:
+    for s in instants:
         events.append({
             "ph": "i", "name": s.name, "cat": s.cat, "pid": pid,
             "tid": s.depth, "s": "t",
             "ts": round(s.t0 * _US, 3),
             "args": json_safe(s.args),
         })
+    # counter tracks (telemetry utilization / queue HWM series); sorted
+    # by time so each track's series is monotone in ts regardless of
+    # which driver emitted the sample.
+    for name, t, value in sorted(getattr(tracer, "counters", ()) or (),
+                                 key=lambda c: c[1]):
+        events.append({
+            "ph": "C", "name": name, "cat": "telemetry", "pid": pid,
+            "tid": 0,
+            "ts": round(t * _US, 3),
+            "args": {"value": float(value)},
+        })
     return {"traceEvents": events, "displayTimeUnit": "ms",
-            "otherData": {"epoch_unix": tracer.epoch_unix,
-                          **json_safe(tracer.meta)}}
+            "otherData": {"epoch_unix": getattr(tracer, "epoch_unix", 0.0),
+                          **json_safe(meta)}}
 
 
 def write_chrome_trace(tracer, path: str, pid: int = 0) -> str:

@@ -183,6 +183,11 @@ def _stat_help() -> dict:
         out.update(getattr(cc_lib, "GRAPH_STAT_HELP", {}))
     except Exception:  # pragma: no cover
         pass
+    try:
+        from repro.obs import telemetry as tele_lib
+        out.update(getattr(tele_lib, "TELEMETRY_HELP", {}))
+    except Exception:  # pragma: no cover
+        pass
     return out
 
 
@@ -211,6 +216,33 @@ def ingest_host_stats(registry: MetricsRegistry, stats: dict,
             registry.counter(prefix + "stage_collectives_recorded",
                              "stages with traced collective counts"
                              ).inc(len(val))
+        elif key == "telemetry":
+            # the device-telemetry sub-dict (stage records + headroom
+            # report) -> utilization histograms and worst-fill gauges;
+            # the full report stays in host_stats / the trace.
+            stages = val.get("stages", []) if isinstance(val, dict) else []
+            registry.counter(prefix + "telemetry/stages",
+                             "stage records carrying device telemetry"
+                             ).inc(len(stages))
+            for rec in stages:
+                registry.histogram(prefix + "telemetry/stage_util_max",
+                                   help_of.get("util_max", "")
+                                   ).observe(float(rec.get("util_max", 0.0)))
+                registry.histogram(prefix + "telemetry/stage_util_mean",
+                                   help_of.get("util_mean", "")
+                                   ).observe(float(rec.get("util_mean", 0.0)))
+            rows = val.get("headroom", []) if isinstance(val, dict) else []
+            if rows:
+                registry.gauge(prefix + "telemetry/worst_fill",
+                               help_of.get("fill_max", "")
+                               ).set(max(float(r.get("fill_max", 0.0))
+                                         for r in rows))
+            dkw = val.get("dkw", []) if isinstance(val, dict) else []
+            if dkw:
+                registry.counter(
+                    prefix + "telemetry/dkw_violations",
+                    "hops whose observed skew exceeded the DKW bound"
+                    ).inc(sum(1 for r in dkw if not r.get("ok", True)))
         elif key == "recovery":
             for rk, rv in val.items():
                 rname = prefix + "recovery/" + rk

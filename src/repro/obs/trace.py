@@ -103,6 +103,7 @@ class NullTracer:
 
     enabled = False
     spans: tuple = ()
+    counters: tuple = ()
     metrics = None
 
     def span(self, name: str, cat: str = "host", **args):
@@ -115,6 +116,9 @@ class NullTracer:
         pass
 
     def instant(self, name: str, cat: str = "host", **args) -> None:
+        pass
+
+    def counter(self, name: str, value, t: float | None = None) -> None:
         pass
 
 
@@ -147,6 +151,9 @@ class Tracer:
         self.epoch_unix = time.time()
         self.spans: list[Span] = []
         self.instants: list[Span] = []
+        #: counter-track samples: (name, t_seconds, float value) — the
+        #: telemetry plane's utilization series (Perfetto "C" events).
+        self.counters: list[tuple[str, float, float]] = []
         self._stack: list[_SpanHandle] = []
         self._metrics = metrics
 
@@ -197,6 +204,13 @@ class Tracer:
         self.instants.append(Span(name=name, cat=cat, index=-1,
                                   parent=parent, depth=len(self._stack),
                                   t0=t, t1=t, args=dict(args)))
+
+    def counter(self, name: str, value, t: float | None = None) -> None:
+        """Sample a counter track (mailbox utilization, queue HWM) at
+        ``t`` (tracer-relative seconds; now() when omitted). Exported
+        as Chrome "C" events — one track per name."""
+        self.counters.append((name, self.now() if t is None else float(t),
+                              float(value)))
 
     # ------------------------------------------------------------ queries
     def find(self, cat: str | None = None,

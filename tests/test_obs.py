@@ -327,6 +327,60 @@ def test_chrome_trace_roundtrip(tmp_path):
     assert all(e["s"] == "t" for e in instants)
 
 
+def test_chrome_trace_null_tracer_and_empty_tree(tmp_path):
+    """Exporter edge cases: the NullTracer, a tracer with no spans at
+    all, and spans without counter samples all export valid
+    Perfetto-loadable JSON (round-trips through json)."""
+    for tracer in (trace_lib.NULL_TRACER, obs.Tracer()):
+        doc = obs.chrome_trace(tracer)
+        blob = json.dumps(doc)
+        back = json.loads(blob)
+        assert isinstance(back["traceEvents"], list)
+        assert back["traceEvents"][0]["ph"] == "M"
+        assert back["displayTimeUnit"] == "ms"
+        assert not [e for e in back["traceEvents"] if e["ph"] == "C"]
+    # spans but no counters: X events export, no C events
+    tr = obs.Tracer(meta={"name": "edge"})
+    with tr.span("solo", cat="stage"):
+        pass
+    path = tmp_path / "edge.json"
+    obs.write_chrome_trace(tr, path)
+    doc = json.loads(path.read_text())
+    phs = [e["ph"] for e in doc["traceEvents"]]
+    assert "X" in phs and "C" not in phs
+
+
+def test_counter_tracks_interleave_with_fault_instants():
+    """Counter samples and fault instants share the timeline: both
+    export, counter events are time-sorted, and their timestamps land
+    inside the span that emitted them."""
+    tr = obs.Tracer()
+    with tr.span("solve", cat="solve"):
+        tr.instant("fault:injected", cat="fault")
+        tr.counter("telemetry/util_max", 0.25)
+        tr.instant("fault:recovered", cat="fault")
+        tr.counter("telemetry/util_max", 0.75)
+        tr.counter("telemetry/queue_hwm", 12.0)
+    doc = obs.chrome_trace(tr)
+    evs = doc["traceEvents"]
+    cs = [e for e in evs if e["ph"] == "C"]
+    instants = [e for e in evs if e["ph"] == "i"]
+    assert len(cs) == 3 and len(instants) == 2
+    assert [e["ts"] for e in cs] == sorted(e["ts"] for e in cs)
+    assert {e["name"] for e in cs} == {"telemetry/util_max",
+                                       "telemetry/queue_hwm"}
+    assert all(e["args"]["value"] >= 0 for e in cs)
+    (solve,) = [e for e in evs if e["ph"] == "X"]
+    for e in cs + instants:
+        assert solve["ts"] <= e["ts"] <= solve["ts"] + solve["dur"]
+    json.dumps(doc)
+
+
+def test_null_tracer_counter_is_noop():
+    trace_lib.NULL_TRACER.counter("telemetry/util_max", 1.0)
+    assert trace_lib.NULL_TRACER.counters == ()
+
+
 def test_residual_summary_totals():
     s, r, cfg = small_case()
     tr = obs.Tracer()
